@@ -1,0 +1,50 @@
+"""Benchmark scaffolding: CSV emission + planner-evaluation helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.planner.baselines import REGISTRY
+from repro.core.planner.baselines.common import evaluate_ranked
+from repro.core.planner.objectives import Objective
+from repro.core.planner.search import plan_for
+from repro.core.profiler.analytic import JobProfile, TrainJob
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def eval_planner(name: str, job: TrainJob, cluster: ClusterSpec,
+                 objective: Objective, metis_cap: float = 60.0):
+    """Run one planner (sailor or baseline); return dict of metrics."""
+    profile = JobProfile(job)
+    if name == "sailor":
+        res, us = timed(plan_for, job.cfg, cluster, objective,
+                        job.seq_len, job.global_batch)
+        best = res.best
+        return {"search_us": res.search_time_s * 1e6, "best": best,
+                "n_oom": res.n_oom}
+    fn = REGISTRY[name]
+    kw = {"time_cap_s": metis_cap} if name == "metis" else {}
+    res, us = timed(fn, job, cluster, **kw)
+    best, n_oom = evaluate_ranked(res, profile, cluster, objective)
+    return {"search_us": res.search_time_s * 1e6, "best": best,
+            "n_oom": n_oom}
+
+
+def fmt_best(best) -> str:
+    if best is None:
+        return "thr=none"
+    return (f"thr={best.throughput:.3f}it/s cost=${best.cost_per_iter:.3f} "
+            f"P={best.plan.pp} D={best.plan.dp} chips={best.plan.n_chips}")

@@ -1,0 +1,59 @@
+"""Kernel-adjacent microbenchmarks (CPU wall-clock; TPU numbers come from
+the roofline analysis — the Pallas kernels themselves are validated in
+interpret mode and only meaningfully *timed* on real TPUs)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from benchmarks.common import emit
+
+
+def _time(fn, *args, iters=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rng = np.random.default_rng(0)
+    b, s, h, d = 1, 1024, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    flops = 4 * b * h * s * s * d * 0.5
+    naive = jax.jit(lambda q, k, v: L.attention(q, k, v, impl="naive"))
+    chunk = jax.jit(lambda q, k, v: L.attention(q, k, v, impl="chunked"))
+    tn = _time(naive, q, k, v)
+    tc = _time(chunk, q, k, v)
+    emit("kern/attn_naive_1k", tn * 1e6, f"{flops/tn/1e9:.1f}GFLOP/s")
+    emit("kern/attn_chunked_1k", tc * 1e6, f"{flops/tc/1e9:.1f}GFLOP/s")
+    # SWA linear vs chunked full at long seq
+    s2 = 4096
+    q2 = jnp.asarray(rng.standard_normal((1, s2, 2, 64)), jnp.float32)
+    k2 = jnp.asarray(rng.standard_normal((1, s2, 2, 64)), jnp.float32)
+    v2 = jnp.asarray(rng.standard_normal((1, s2, 2, 64)), jnp.float32)
+    win = jax.jit(lambda q, k, v: L.attn_window_linear(q, k, v, window=512))
+    full = jax.jit(lambda q, k, v: L.attention(q, k, v, impl="chunked"))
+    tw = _time(win, q2, k2, v2)
+    tf = _time(full, q2, k2, v2)
+    emit("kern/swa_linear_4k_w512", tw * 1e6, f"speedup={tf/tw:.2f}x")
+    emit("kern/attn_chunked_4k", tf * 1e6, "")
+    # mamba2 chunked SSD vs sequential-scan reference
+    from repro.models.mamba2 import ssd_chunked
+    from repro.kernels.ref import ssd_ref
+    x = jnp.asarray(rng.standard_normal((1, 2048, 4, 32)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (1, 2048, 4)), jnp.float32)
+    a = -jnp.ones((4,), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((1, 2048, 32)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((1, 2048, 32)), jnp.float32)
+    f_chunk = jax.jit(lambda *a_: ssd_chunked(*a_, chunk=128)[0])
+    f_seq = jax.jit(lambda *a_: ssd_ref(*a_)[0])
+    t1 = _time(f_chunk, x, dt, a, bb, cc)
+    t2 = _time(f_seq, x, dt, a, bb, cc)
+    emit("kern/ssd_chunked_2k", t1 * 1e6, f"vs_sequential={t2/t1:.1f}x")

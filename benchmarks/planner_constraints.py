@@ -1,0 +1,59 @@
+"""Figures 11/12: optimization with constraints.
+
+Scenario 1: min cost s.t. throughput >= 0.2 it/s.
+Scenario 2: max throughput s.t. cost <= 1.2 $/iter.
+Baselines are re-ranked by the scenario objective over their plan lists
+(the paper's adaptation, §5.2.4)."""
+from repro.configs import get_config
+from repro.core.cluster import multi_zone
+from repro.core.planner.baselines import REGISTRY
+from repro.core.planner.baselines.common import evaluate_ranked
+from repro.core.planner.objectives import (MAX_THROUGHPUT, MIN_COST,
+                                           Objective)
+from repro.core.planner.search import plan_for
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.simulator.simulate import simulate
+
+from benchmarks.common import emit, fmt_best
+
+BASELINES = ("galvatron", "amp", "flashflex", "dtfm")
+
+
+def _rerank(name, job, cl, objective):
+    fn = REGISTRY[name]
+    kw = {"time_cap_s": 20} if name == "metis" else {}
+    res = fn(job, cl, **kw)
+    profile = JobProfile(job)
+    best = None
+    for p in res.ranked_plans[:60]:
+        r = simulate(profile, p, cl)
+        if not r.valid or not objective.satisfies(r):
+            continue
+        if objective.better(best, r):
+            best = r
+    return best
+
+
+def run():
+    opt = get_config("opt-350m")
+    cl = multi_zone({
+        "us-central1-a": ("us-central1", {"A100-40": 128, "V100-16": 128}),
+        "us-central1-b": ("us-central1", {"A100-40": 128, "V100-16": 128}),
+    })
+    job = TrainJob(cfg=opt, seq_len=2048, global_batch=2048)
+
+    s1 = Objective(MIN_COST, min_throughput=0.2)
+    res = plan_for(opt, cl, s1, 2048, 2048)
+    emit("fig11/sailor_mincost_thr0.2", res.search_time_s * 1e6,
+         fmt_best(res.best))
+    for name in BASELINES:
+        best = _rerank(name, job, cl, s1)
+        emit(f"fig11/{name}_mincost_thr0.2", 0.0, fmt_best(best))
+
+    s2 = Objective(MAX_THROUGHPUT, max_cost_per_iter=1.2)
+    res = plan_for(opt, cl, s2, 2048, 2048)
+    emit("fig12/sailor_maxthr_cost1.2", res.search_time_s * 1e6,
+         fmt_best(res.best))
+    for name in BASELINES:
+        best = _rerank(name, job, cl, s2)
+        emit(f"fig12/{name}_maxthr_cost1.2", 0.0, fmt_best(best))

@@ -1,0 +1,24 @@
+"""Figure 10: geo-distributed (5 zones / 2 regions) vs DTFM, OPT-350M."""
+from repro.configs import get_config
+from repro.core.cluster import multi_zone
+from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+from repro.core.profiler.analytic import TrainJob
+
+from benchmarks.common import emit, eval_planner, fmt_best
+
+
+def run():
+    opt = get_config("opt-350m")
+    for per_zone in (16, 32):
+        cl = multi_zone({
+            "us-central1-a": ("us-central1", {"A100-40": per_zone}),
+            "us-central1-b": ("us-central1", {"A100-40": per_zone}),
+            "us-central1-c": ("us-central1", {"A100-40": per_zone}),
+            "us-central1-f": ("us-central1", {"A100-40": per_zone}),
+            "us-west1-a": ("us-west1", {"A100-40": per_zone}),
+        })
+        job = TrainJob(cfg=opt, seq_len=2048, global_batch=2048)
+        for name in ("sailor", "dtfm"):
+            r = eval_planner(name, job, cl, Objective(MAX_THROUGHPUT))
+            emit(f"fig10/geo5z2r_{per_zone}each_{name}", r["search_us"],
+                 fmt_best(r["best"]) + f" oom={r['n_oom']}")

@@ -1,0 +1,31 @@
+"""Figures 8/9: heterogeneous A100+V100 for OPT-350M and GPT-Neo-2.7B.
+
+Also reports Sailor restricted to each homogeneous pool (the paper's
+Sailor-A100 / Sailor-V100 bars) and the OOM-plans-before-valid counts."""
+from repro.configs import get_config
+from repro.core.cluster import heterogeneous_zone, single_zone
+from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+from repro.core.profiler.analytic import TrainJob
+
+from benchmarks.common import emit, eval_planner, fmt_best
+
+PLANNERS = ("sailor", "amp", "flashflex", "metis")
+
+
+def run():
+    for model_name, model in (("opt350m", get_config("opt-350m")),
+                              ("gptneo", get_config("gpt-neo-2.7b"))):
+        for a, v in ((32, 32), (32, 96)):
+            cl = heterogeneous_zone({"A100-40": a, "V100-16": v})
+            job = TrainJob(cfg=model, seq_len=2048, global_batch=2048)
+            for name in PLANNERS:
+                r = eval_planner(name, job, cl, Objective(MAX_THROUGHPUT),
+                                 metis_cap=30)
+                emit(f"fig89/{model_name}_{a}A{v}V_{name}", r["search_us"],
+                     fmt_best(r["best"]) + f" oom={r['n_oom']}")
+            # homogeneous-only Sailor variants
+            for pool, nn in (("A100-40", a), ("V100-16", v)):
+                r = eval_planner("sailor", job, single_zone(pool, nn),
+                                 Objective(MAX_THROUGHPUT))
+                emit(f"fig89/{model_name}_{a}A{v}V_sailor-{pool}",
+                     r["search_us"], fmt_best(r["best"]))

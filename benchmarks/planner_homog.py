@@ -1,0 +1,22 @@
+"""Figure 7: planner comparison, homogeneous A100, OPT-350M."""
+from repro.configs import get_config
+from repro.core.cluster import single_zone
+from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+from repro.core.profiler.analytic import TrainJob
+
+from benchmarks.common import emit, eval_planner, fmt_best
+
+PLANNERS = ("sailor", "piper", "varuna", "galvatron", "amp", "flashflex",
+            "metis", "dtfm")
+
+
+def run():
+    opt = get_config("opt-350m")
+    for n in (32, 128):
+        cl = single_zone("A100-40", n)
+        job = TrainJob(cfg=opt, seq_len=2048, global_batch=2048)
+        for name in PLANNERS:
+            r = eval_planner(name, job, cl, Objective(MAX_THROUGHPUT),
+                             metis_cap=30)
+            emit(f"fig7/{name}_{n}xA100", r["search_us"],
+                 fmt_best(r["best"]) + f" oom={r['n_oom']}")

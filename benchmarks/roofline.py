@@ -1,0 +1,55 @@
+"""§Roofline table from the dry-run artifacts (one row per cell)."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def run():
+    rows = sorted(glob.glob(os.path.join(ART, "*__single.json")))
+    if not rows:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    worst = None
+    for path in rows:
+        with open(path) as f:
+            rec = json.load(f)
+        name = f"roofline/{rec['arch']}_{rec['shape']}"
+        if rec.get("skipped"):
+            emit(name, 0.0, "SKIP " + rec["skip_reason"][:60])
+            continue
+        if not rec.get("ok"):
+            emit(name, 0.0, "FAIL " + str(rec.get("error"))[:60])
+            continue
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        ratio = rec.get("useful_flops_ratio")
+        emit(name, bound * 1e6,
+             f"dom={r['dominant']} comp={r['compute_s']*1e3:.2f}ms "
+             f"mem={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms "
+             f"roofline_frac={frac:.2f} useful={ratio:.2f} "
+             f"fits={rec['fits_hbm']}"
+             if ratio is not None else f"dom={r['dominant']}")
+        if worst is None or frac < worst[1]:
+            worst = (name, frac)
+    if worst:
+        emit("roofline/worst_fraction_cell", 0.0,
+             f"{worst[0]} frac={worst[1]:.3f}")
+    # §Perf optimized variants (tagged artifacts)
+    for path in sorted(glob.glob(os.path.join(ART, "*__single__*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if not rec.get("ok") or rec.get("skipped"):
+            continue
+        r = rec["roofline"]
+        emit(f"perf/{rec['arch']}_{rec['shape']}__{rec['tag']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dom={r['dominant']} comp={r['compute_s']*1e3:.1f}ms "
+             f"mem={r['memory_s']*1e3:.1f}ms coll={r['collective_s']*1e3:.1f}ms "
+             f"peak={rec['per_device']['peak_bytes']/1e9:.1f}GB "
+             f"fits={rec['fits_hbm']}")

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,roofline]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("search_time", "benchmarks.search_time"),        # Tables 1-3, §5.3
+    ("fig7", "benchmarks.planner_homog"),             # Fig 7
+    ("fig89", "benchmarks.planner_hetero"),           # Figs 8/9
+    ("fig10", "benchmarks.planner_geo"),              # Fig 10
+    ("fig1112", "benchmarks.planner_constraints"),    # Figs 11/12
+    ("fig5", "benchmarks.simulator_accuracy"),        # Figs 5/6
+    ("roofline", "benchmarks.roofline"),              # §Roofline (dry-run)
+    ("kern", "benchmarks.kernels_bench"),             # kernel microbench
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failed = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t1 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run()
+        except Exception as e:
+            failed.append(key)
+            print(f"{key}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {key} done in {time.time() - t1:.1f}s", flush=True)
+    print(f"# total {time.time() - t0:.1f}s")
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

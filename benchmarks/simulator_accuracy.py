@@ -1,0 +1,93 @@
+"""Figures 5/6 analog: simulator accuracy on this rig.
+
+Memory: the simulator's per-worker peak estimate vs XLA's compiled
+memory_analysis for a grid of (arch, mbs) single-device train steps.
+Timing: simulator iteration-time prediction (with the calibrated cpu-host
+profile) vs real measured wall-clock of the jitted step on CPU.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cluster import single_zone
+from repro.core.planner.plan import homogeneous_plan
+from repro.core.profiler import measured
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.simulator import memory as mem_mod
+from repro.core.simulator.simulate import simulate
+from repro.models import model as model_lib
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+from repro.train.train_step import make_train_step
+
+from benchmarks.common import emit
+
+ARCHS = ("smollm_360m", "qwen1_5_0_5b", "mamba2_130m")
+SEQ = 64
+
+
+def _reduced(arch):
+    return dataclasses.replace(get_config(arch).reduced(), remat="none")
+
+
+def run():
+    mem_errors, time_errors = [], []
+    mem_cfg = mem_mod.MemoryModelConfig(
+        param_bytes=4, grad_bytes=4, opt_bytes=8,     # fp32 runtime
+        fragmentation=1.0, runtime_overhead=0.0)
+    for arch in ARCHS:
+        cfg = _reduced(arch)
+        # calibrated cpu-host profile makes analytic == measured profiler
+        spec = measured.calibrate_cpu_host(cfg, seq_len=SEQ)
+        measured.register_calibrated(spec, "cpu-host")
+        params = model_lib.init(cfg, jax.random.PRNGKey(0))
+        opt_cfg = opt_lib.OptimizerConfig(lr=1e-3)
+        opt_state = opt_lib.init_state(params)
+        job = TrainJob(cfg=cfg, seq_len=SEQ, global_batch=8, remat="none")
+        profile = JobProfile(job)
+        cluster = single_zone("cpu-host", 1)
+        for mbs in (2, 8):
+            nm = 8 // mbs
+            ds = data_lib.SyntheticDataset(cfg, data_lib.DataConfig(
+                seq_len=SEQ, global_batch=8, num_microbatches=nm))
+            batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
+            step = jax.jit(make_train_step(cfg, opt_cfg))
+            lowered = step.lower(params, opt_state, batch)
+            compiled = lowered.compile()
+            ma = compiled.memory_analysis()
+            actual_mem = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                          + ma.temp_size_in_bytes)
+            plan = homogeneous_plan("cpu-host", cluster.zones[0].name,
+                                    1, 1, 1, profile.n_partition_units,
+                                    mbs, 8)
+            pred_mem = mem_mod.worker_peak_bytes(profile, plan, 0, 1,
+                                                 mem_cfg)
+            mem_err = abs(pred_mem - actual_mem) / actual_mem
+            mem_errors.append(mem_err)
+            mem_abs_mb = abs(pred_mem - actual_mem) / 1e6
+            # timing
+            p2, o2, _ = step(params, opt_state, batch)  # compile+warm
+            jax.block_until_ready(p2)
+            t0 = time.perf_counter()
+            for _ in range(3):
+                p2, o2, m = step(p2, o2, batch)
+                jax.block_until_ready(m["loss"])
+            actual_t = (time.perf_counter() - t0) / 3
+            pred_t = simulate(profile, plan, cluster).t_iter
+            t_err = abs(pred_t - actual_t) / actual_t
+            time_errors.append(t_err)
+            emit(f"fig5/{arch}_mbs{mbs}", actual_t * 1e6,
+                 f"mem_pred={pred_mem/1e6:.1f}MB mem_act={actual_mem/1e6:.1f}MB "
+                 f"mem_err={mem_err*100:.1f}% (abs {mem_abs_mb:.0f}MB) "
+                 f"t_pred={pred_t*1e3:.1f}ms "
+                 f"t_act={actual_t*1e3:.1f}ms t_err={t_err*100:.1f}%")
+    emit("fig5/summary", 0.0,
+         f"mem_err_mean={np.mean(mem_errors)*100:.1f}% "
+         f"time_err_mean={np.mean(time_errors)*100:.1f}% "
+         "(toy MB-scale: relative mem err dominated by XLA workspace "
+         "padding; production-scale memory validation = dry-run "
+         "memory_analysis, see EXPERIMENTS.md)")

@@ -1,0 +1,54 @@
+"""Quickstart: plan a heterogeneous, geo-distributed training job.
+
+Reproduces the paper's headline workflow (Fig. 4) in one page:
+  1. describe the fleet (quotas per zone/region, GPU types),
+  2. pick an objective (+ optional constraints),
+  3. Sailor co-optimizes the resource allocation AND the parallelization
+     plan in seconds, with accurate memory/time/cost estimates.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import get_config
+from repro.core.cluster import multi_zone
+from repro.core.planner.objectives import (MAX_THROUGHPUT, MIN_COST,
+                                           Objective)
+from repro.core.planner.search import plan_for
+
+# --- the fleet: what `gcloud` would tell you is actually available -------
+cluster = multi_zone({
+    "us-central1-a": ("us-central1", {"A100-40": 16, "V100-16": 48}),
+    "us-central1-b": ("us-central1", {"A100-40": 16}),
+    "us-west1-a":    ("us-west1",    {"A100-40": 32}),
+})
+
+model = get_config("opt-350m")          # the paper's evaluation model
+SEQ, GBS = 2048, 2048                   # paper §5 training setup
+
+# --- objective 1: maximum throughput --------------------------------------
+res = plan_for(model, cluster, Objective(MAX_THROUGHPUT), SEQ, GBS)
+best = res.best
+print(f"[throughput] searched in {res.search_time_s:.2f}s "
+      f"({res.n_evaluated} candidates simulated, {res.n_oom} OOM-pruned)")
+print(f"  -> {best.throughput:.3f} iter/s "
+      f"({best.samples_per_s:.0f} seq/s) at ${best.cost_per_iter:.3f}/iter")
+print(best.plan.describe())
+print()
+
+# --- objective 2: minimum cost, but keep at least 0.1 iter/s ---------------
+res2 = plan_for(model, cluster,
+                Objective(MIN_COST, min_throughput=0.1), SEQ, GBS,
+                max_pp=8)     # keep the demo snappy (<1 min)
+best2 = res2.best
+print(f"[min-cost, thr>=0.1] searched in {res2.search_time_s:.2f}s")
+print(f"  -> ${best2.cost_per_iter:.3f}/iter at {best2.throughput:.3f} "
+      f"iter/s using {best2.plan.n_chips} chips")
+print(best2.plan.describe())
+print()
+
+# --- what the simulator predicted for the winning plan ----------------------
+t = best.timing
+print(f"[simulator] t_iter={t.t_iter*1e3:.0f}ms = pipeline {t.t_pp*1e3:.0f}"
+      f" + sync {t.t_sync*1e3:.0f} + update {t.t_update*1e3:.0f} "
+      f"(straggler: stage {t.straggler_stage})")
+worst = max((r["peak"] for row in best.peak_mem for r in row))
+print(f"[simulator] worst worker peak memory: {worst/1e9:.1f} GB")

@@ -1,0 +1,52 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` resolves any registered arch; ``ARCH_IDS`` lists the ten
+assigned architectures (plus the paper's own OPT-350M / GPT-Neo-2.7B used by
+the planner benchmarks).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "smollm_360m",
+    "qwen1_5_0_5b",
+    "minitron_8b",
+    "granite_20b",
+    "mixtral_8x22b",
+    "dbrx_132b",
+    "zamba2_2_7b",
+    "whisper_tiny",
+    "mamba2_130m",
+    "internvl2_26b",
+]
+
+PAPER_IDS: List[str] = ["opt_350m", "gpt_neo_2_7b"]
+
+_ALIASES = {
+    "smollm-360m": "smollm_360m",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "minitron-8b": "minitron_8b",
+    "granite-20b": "granite_20b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "dbrx-132b": "dbrx_132b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-130m": "mamba2_130m",
+    "internvl2-26b": "internvl2_26b",
+    "opt-350m": "opt_350m",
+    "gpt-neo-2.7b": "gpt_neo_2_7b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {a: get_config(a) for a in ARCH_IDS}

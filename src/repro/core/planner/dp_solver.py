@@ -1,0 +1,327 @@
+"""Per-stage resource assignment via dynamic programming (paper Listing 1).
+
+For a fixed (P, layer split, mbs, D, per-type TP options), choose for every
+stage the multiset of D replicas — how many replicas on each (GPU type, TP)
+"pseudo-type", in which region — minimizing estimated iteration time under
+an optional budget.
+
+    T_iter_est = sum_i(t_i + 2 p2p_i)                (warmup + cooldown)
+               + (N_micro - 1) * max_i(t_i + 2 p2p_i) (steady / straggler)
+               + max_i(t_sync_i)                      (DP sync bottleneck)
+
+Exactness: the combination operators are sums and maxes, so optimal
+substructure only holds over a Pareto frontier of partial solutions
+(warmup_sum, steady_max, sync_max, $rate).  ``solve`` memoizes a bounded
+frontier per (stage, remaining-capacity, region) — the "reuse of
+intermediate results" the paper credits for its speed, made exact up to the
+frontier bound.  Hot-path representation: capacities are flat int tuples and
+pseudo-types are small ints, so memo keys hash fast (the planner's <1 s
+claim for 128 GPUs, Table 1, holds in pure Python).
+
+Budget constraint (§4.2.3): cost per stage needs the pipeline straggler,
+which is unknown mid-recursion.  Like the paper we assume a straggler,
+solve, compare against the realized straggler, and re-solve with the
+updated assumption until it stabilizes (lines 17-32 of Listing 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.profiler.analytic import DTYPE_BYTES, JobProfile
+from repro.core.simulator import network
+
+
+@dataclasses.dataclass(frozen=True)
+class StageChoice:
+    region_idx: int
+    counts: Tuple[Tuple[str, int, int], ...]  # ((gpu_type, tp, n_replicas),)
+
+
+@dataclasses.dataclass(frozen=True)
+class Partial:
+    """Pareto node for stages i..P-1."""
+    warmup: float
+    steady: float
+    sync: float
+    rate: float                              # $/s of chips in these stages
+    choices: Tuple                           # internal rep; decoded at end
+
+    def est_time(self, n_micro: int) -> float:
+        return self.warmup + max(n_micro - 1, 0) * self.steady + self.sync
+
+    def est_cost(self, n_micro: int) -> float:
+        return self.rate * self.est_time(n_micro)
+
+
+class DPSolver:
+    def __init__(self, profile: JobProfile, cluster: ClusterSpec,
+                 splits: Sequence[Tuple[int, int]], mbs: int, d: int,
+                 tp_sel: Sequence[Dict[str, List[int]]],
+                 regions: Sequence[str],
+                 region_caps: Sequence[Dict[str, int]],
+                 budget: Optional[float] = None,
+                 frontier_keep: int = 4, max_combos: int = 24,
+                 time_bound: Optional[float] = None):
+        self.profile = profile
+        self.cluster = cluster
+        self.splits = list(splits)
+        self.pp = len(splits)
+        self.mbs = mbs
+        self.d = d
+        self.tp_sel = list(tp_sel)
+        self.regions = list(regions)
+        self.budget = budget
+        self.keep = frontier_keep
+        self.max_combos = max_combos
+        # branch & bound: the steady term alone lower-bounds est_time, so a
+        # combo whose straggler already exceeds the best-known full plan
+        # (x1.1 slack for the simulator's extra terms) cannot win.
+        self.time_bound = time_bound
+        self.n_micro = profile.job.global_batch // (d * mbs)
+        self._memo: Dict = {}
+        self.stats = {"combos": 0, "memo_hits": 0, "budget_rounds": 0,
+                      "states": 0}
+        self.max_states = 200_000            # safety valve, documented
+
+        # ---- flat capacity vector: one slot per (region, base type) ----
+        self.base_types = sorted({t for sel in tp_sel for t in sel})
+        self.slot = {(ri, t): ri * len(self.base_types) + k
+                     for ri in range(len(self.regions))
+                     for k, t in enumerate(self.base_types)}
+        caps0 = [0] * (len(self.regions) * len(self.base_types))
+        for ri, pool in enumerate(region_caps):
+            for t, n in pool.items():
+                if t in self.base_types:
+                    caps0[self.slot[(ri, t)]] = n
+        self.caps0 = tuple(caps0)
+
+        # ---- pseudo-types per stage: (type_idx, tp, chips, time, $rate) ----
+        self._price: Dict[Tuple[int, str], float] = {}
+        for ri, rname in enumerate(self.regions):
+            zones = cluster.zones_in_region(rname)
+            for t in self.base_types:
+                self._price[(ri, t)] = min(
+                    (z.price_per_sec(t) for z in zones), default=0.0)
+        self._pseudo: List[List[Tuple[int, int, float]]] = []
+        self._params_stage: List[float] = []
+        self._t_stage: Dict[Tuple[int, int, int], float] = {}
+        for i, (lo, hi) in enumerate(self.splits):
+            self._params_stage.append(profile.stage_params(lo, hi))
+            opts = []
+            for t, tps in self.tp_sel[i].items():
+                ti = self.base_types.index(t)
+                for tp in tps:
+                    fwd, bwd, _ = profile.stage_cost(lo, hi, t, tp, mbs)
+                    self._t_stage[(i, ti, tp)] = fwd + bwd
+                    opts.append((ti, tp, fwd + bwd))
+            opts.sort(key=lambda o: o[2])     # fastest first
+            self._pseudo.append(opts)
+
+        self._p2p_intra = network.p2p_time(
+            cluster.links["intra-zone"], profile.boundary_bytes(mbs))
+        self._p2p_inter = network.p2p_time(
+            cluster.links["inter-region"], profile.boundary_bytes(mbs))
+        self._sync_cache: Dict[Tuple[int, int], float] = {}
+        self._combo_cache: Dict = {}
+
+    # --- stage-local quantities --------------------------------------------------
+    def _sync(self, i: int, tp_min: int) -> float:
+        if self.d <= 1:
+            return 0.0
+        key = (i, tp_min)
+        if key not in self._sync_cache:
+            nbytes = self._params_stage[i] / tp_min * DTYPE_BYTES
+            self._sync_cache[key] = network.all_reduce_time(
+                self.cluster.links["intra-zone"], nbytes, self.d)
+        return self._sync_cache[key]
+
+    # --- combo generation (Listing 1 generate_combos) ------------------------------
+    # combo rep: (region_idx, ((pseudo_pos, n), ...), t_i, chips_by_slot)
+    def _combos(self, i: int, caps: Tuple[int, ...], region_lo: int):
+        key = (i, caps, region_lo)
+        hit = self._combo_cache.get(key)
+        if hit is not None:
+            return hit
+        out = []
+        pseudo = self._pseudo[i]
+        nt = len(self.base_types)
+        d = self.d
+        for ri in range(region_lo, len(self.regions)):
+            base = caps[ri * nt:(ri + 1) * nt]
+            seen = set()
+
+            def emit(parts):              # parts: ((pos, n), ...) sorted
+                if parts in seen or not parts:
+                    return
+                seen.add(parts)
+                t_i = max(pseudo[pos][2] for pos, _ in parts)
+                tp_min = min(pseudo[pos][1] for pos, _ in parts)
+                consume = [0] * nt
+                rate = 0.0
+                for pos, n in parts:
+                    ti, tp, _ = pseudo[pos]
+                    consume[ti] += n * tp
+                    rate += self._price[(ri, self.base_types[ti])] * n * tp
+                out.append((ri, parts, t_i, tp_min, tuple(consume), rate))
+
+            # 1) pure combos (never truncated away)
+            for pos, (ti, tp, _) in enumerate(pseudo):
+                if base[ti] // tp >= d:
+                    emit(((pos, d),))
+            # 2) two-pseudo mixes across different base types, biggest
+            #    fast-type share first
+            for a in range(len(pseudo)):
+                if len(out) >= self.max_combos:
+                    break
+                for b in range(a + 1, len(pseudo)):
+                    ta, tpa, _ = pseudo[a]
+                    tb, tpb, _ = pseudo[b]
+                    if ta == tb:
+                        continue
+                    na_max = min(base[ta] // tpa, d - 1)
+                    for na in range(na_max, 0, -1):
+                        nb = d - na
+                        if base[tb] // tpb >= nb:
+                            emit(((a, na), (b, nb)))
+                            break
+            self.stats["combos"] += len(out)
+        self._combo_cache[key] = out
+        return out
+
+    # --- recursion ---------------------------------------------------------------------
+    def solve(self, i: int = 0, caps: Optional[Tuple[int, ...]] = None,
+              region_lo: int = 0,
+              straggler_assumed: float = 0.0) -> List[Partial]:
+        if caps is None:
+            caps = self.caps0
+        strag_key = None
+        if self.budget is not None and straggler_assumed > 0:
+            exp = math.floor(math.log10(straggler_assumed))
+            strag_key = round(straggler_assumed, 1 - exp)
+        key = (i, caps, region_lo, strag_key)
+        hit = self._memo.get(key)
+        if hit is not None:
+            self.stats["memo_hits"] += 1
+            return hit
+        self.stats["states"] += 1
+        if self.stats["states"] > self.max_states:
+            return []                        # safety valve
+
+        nt = len(self.base_types)
+        n_micro = self.n_micro
+        last = i == self.pp - 1
+        frontier: List[Partial] = []
+        bound = self.time_bound
+        for ri, parts, t_i, tp_min, consume, rate_i in self._combos(
+                i, caps, region_lo):
+            if bound is not None and max(n_micro - 1, 1) * t_i > bound * 1.1:
+                continue                     # cannot beat the incumbent
+            sync_i = self._sync(i, tp_min)
+            if self.budget is not None:
+                strag = max(straggler_assumed, t_i)
+                if rate_i * max(n_micro - 1, 1) * strag > self.budget:
+                    continue
+            if last:
+                frontier.append(Partial(t_i, t_i, sync_i, rate_i,
+                                        ((ri, parts),)))
+                continue
+            new_caps = list(caps)
+            off = ri * nt
+            for k in range(nt):
+                new_caps[off + k] -= consume[k]
+            nxt = self.solve(i + 1, tuple(new_caps), ri,
+                             max(straggler_assumed, t_i))
+            for sub in nxt:
+                p2p = (self._p2p_intra if sub.choices[0][0] == ri
+                       else self._p2p_inter)
+                unit = t_i + 2 * p2p
+                frontier.append(Partial(
+                    unit + sub.warmup,
+                    unit if unit > sub.steady else sub.steady,
+                    sync_i if sync_i > sub.sync else sub.sync,
+                    rate_i + sub.rate,
+                    ((ri, parts),) + sub.choices))
+        frontier = self._prune(frontier)
+        self._memo[key] = frontier
+        return frontier
+
+    def _prune(self, frontier: List[Partial]) -> List[Partial]:
+        if not frontier:
+            return frontier
+        n_micro = self.n_micro
+        frontier.sort(key=lambda p: p.warmup + max(n_micro - 1, 0) * p.steady
+                      + p.sync)
+        out: List[Partial] = [frontier[0]]
+        for p in frontier[1:]:
+            dominated = False
+            for q in out:
+                if (q.warmup <= p.warmup and q.steady <= p.steady
+                        and q.sync <= p.sync and q.rate <= p.rate):
+                    dominated = True
+                    break
+            if not dominated:
+                out.append(p)
+                if len(out) >= self.keep:
+                    break
+        return out
+
+    # --- decode internal choices to StageChoice ------------------------------------
+    def decode(self, partial: Partial) -> List[StageChoice]:
+        out = []
+        for i, (ri, parts) in enumerate(partial.choices):
+            pseudo = self._pseudo[i]
+            counts = []
+            for pos, n in parts:
+                ti, tp, _ = pseudo[pos]
+                counts.append((self.base_types[ti], tp, n))
+            out.append(StageChoice(region_idx=ri,
+                                   counts=tuple(sorted(counts))))
+        return out
+
+    # --- entry with budget loop (§4.2.3) ------------------------------------------
+    def _select(self, front: List[Partial], kind: str,
+                max_time: Optional[float]) -> Optional[Partial]:
+        if max_time is not None:
+            ok = [p for p in front if p.est_time(self.n_micro) <= max_time]
+            front = ok or front          # fall back: simulator re-checks
+        if not front:
+            return None
+        if kind == "cost":
+            return min(front, key=lambda p: p.est_cost(self.n_micro))
+        return front[0]
+
+    def best(self, kind: str = "time",
+             max_time: Optional[float] = None) -> Optional[Partial]:
+        if self.budget is None:
+            return self._select(self.solve(), kind, max_time)
+        # fast path: if the unconstrained optimum already fits the budget it
+        # is also the constrained optimum (throughput objective).
+        budget, self.budget = self.budget, None
+        front = self.solve()
+        self.budget = budget
+        ok = [p for p in front if p.est_cost(self.n_micro) <= budget]
+        if ok:
+            return self._select(ok, kind, max_time)
+        if kind == "cost":
+            # budget here is only the incumbent-prune bound; the simulator
+            # re-validates — no need for the straggler fixpoint loop.
+            return self._select(front, kind, max_time)
+        self._memo.clear()
+        assumed = 0.0
+        best = None
+        for _ in range(3):                   # straggler fixpoint loop
+            self.stats["budget_rounds"] += 1
+            front = self.solve(straggler_assumed=assumed)
+            front = [p for p in front
+                     if p.est_cost(self.n_micro) <= self.budget]
+            if not front:
+                return best
+            best = self._select(front, kind, max_time) or front[0]
+            realized = best.steady
+            if realized <= assumed + 1e-9:
+                return best
+            assumed = realized               # adjust and re-solve
+        return best

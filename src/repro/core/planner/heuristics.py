@@ -1,0 +1,122 @@
+"""Search-space pruning heuristics H1-H6 (paper §4.2.1).
+
+H1  TP stays within one node -> tp options are powers of two up to
+    chips_per_node, and every stage replica uses a single GPU type.
+H2  Minimum TP per (stage, GPU type) from the memory model; smaller TP is
+    never explored.  Availability-independent, so cached and reused across
+    re-plans (``TPTable``).
+H3  max-throughput: iterate D in DECREASING order, stop once throughput
+    stops improving.
+H4  min-cost: iterate D in INCREASING order, stop once a solution inside
+    the throughput constraint is found / cost stops decreasing.
+H5  DP stays within one region; PP may cross regions (stage -> region
+    assignment is monotone over an ordered region list).
+H6  zones within a region are planned as one pool; concrete zone spread is
+    re-introduced when the plan is materialized.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.profiler.analytic import JobProfile
+from repro.core.profiler.hw_specs import get_accelerator
+from repro.core.simulator import memory as mem_mod
+
+
+def tp_options(gpu_type: str) -> List[int]:
+    """H1: powers of two within a node."""
+    n = get_accelerator(gpu_type).chips_per_node
+    out = []
+    t = 1
+    while t <= n:
+        out.append(t)
+        t *= 2
+    return out
+
+
+class TPTable:
+    """H2: min/valid TP per (P, stage split, mbs, gpu_type); cached."""
+
+    def __init__(self, profile: JobProfile,
+                 mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM):
+        self.profile = profile
+        self.mem_cfg = mem_cfg
+
+    @functools.lru_cache(maxsize=None)
+    def min_tp(self, pp: int, stage_idx: int, lo: int, hi: int, mbs: int,
+               gpu_type: str) -> Optional[int]:
+        return mem_mod.min_tp_for_stage(
+            self.profile, pp, stage_idx, lo, hi, mbs, gpu_type,
+            tuple(tp_options(gpu_type)), self.mem_cfg)
+
+
+def region_pools(cluster: ClusterSpec) -> Tuple[List[str], List[Dict[str, int]]]:
+    """H6: aggregate zone capacity at region granularity.
+
+    Regions ordered by total capacity (descending) so pipelines start in
+    the best-provisioned region."""
+    regions = cluster.regions
+    caps = []
+    for r in regions:
+        pool: Dict[str, int] = {}
+        for z in cluster.zones_in_region(r):
+            for t, n in z.capacity.items():
+                pool[t] = pool.get(t, 0) + n
+        caps.append(pool)
+    order = sorted(range(len(regions)),
+                   key=lambda i: -sum(caps[i].values()))
+    return [regions[i] for i in order], [caps[i] for i in order]
+
+
+def dp_candidates(global_batch: int, mbs: int, max_d: int,
+                  decreasing: bool) -> List[int]:
+    """H3/H4: feasible D values ordered per objective."""
+    out = [d for d in range(1, max_d + 1)
+           if global_batch % (d * mbs) == 0]
+    return sorted(out, reverse=decreasing)
+
+
+def mbs_candidates(global_batch: int, cap: int = 8) -> List[int]:
+    out = []
+    m = 1
+    while m <= cap and global_batch % m == 0:
+        out.append(m)
+        m *= 2
+    return out
+
+
+def pp_candidates(n_layers: int, total_chips: int,
+                  max_pp: int = 16) -> List[int]:
+    """Pipeline degrees explored (Megatron-style set: small values + powers
+    of two and 3/6/12 for odd layer counts), bounded by layers and chips."""
+    lim = min(n_layers, total_chips, max_pp)
+    cands = [1, 2, 3, 4, 6, 8, 12, 16, 24, 32]
+    return [p for p in cands if p <= lim]
+
+
+def balanced_split(profile: JobProfile, pp: int) -> List[Tuple[int, int]]:
+    """Split the unrolled layer sequence into pp contiguous ranges with
+    near-equal compute (embed/head get folded into first/last stages)."""
+    kinds = profile.layer_kinds()
+    n = len(kinds)
+    ref_gpu = "tpu-v5e"
+    w = [max(profile.cost(k, ref_gpu, 1, 1).fwd, 1e-12) for k in kinds]
+    total = sum(w)
+    bounds = [0]
+    acc = 0.0
+    j = 1
+    for i, wi in enumerate(w):
+        acc += wi
+        while j < pp and acc >= total * j / pp and n - (i + 1) >= pp - j:
+            bounds.append(i + 1)
+            j += 1
+    while len(bounds) < pp:              # force remaining cut points
+        bounds.append(bounds[-1] + 1)
+    bounds.append(n)
+    for k in range(1, pp + 1):           # monotone, non-empty
+        bounds[k] = max(bounds[k], bounds[k - 1] + 1)
+    for k in range(pp, 0, -1):           # leave room for later stages
+        bounds[k] = min(bounds[k], n - (pp - k))
+    return [(bounds[i], bounds[i + 1]) for i in range(pp)]

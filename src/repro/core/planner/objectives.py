@@ -1,0 +1,41 @@
+"""User objectives + constraints (paper Fig. 4 inputs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.simulator.simulate import SimResult
+
+MAX_THROUGHPUT = "max_throughput"
+MIN_COST = "min_cost"
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    kind: str = MAX_THROUGHPUT
+    # constraints (paper: budget per iteration / min throughput)
+    max_cost_per_iter: Optional[float] = None      # $ per iteration
+    min_throughput: Optional[float] = None         # iterations per second
+
+    def satisfies(self, r: SimResult) -> bool:
+        if not r.valid:
+            return False
+        if self.max_cost_per_iter is not None \
+                and r.cost_per_iter > self.max_cost_per_iter:
+            return False
+        if self.min_throughput is not None \
+                and r.throughput < self.min_throughput:
+            return False
+        return True
+
+    def score(self, r: SimResult) -> float:
+        """Lower is better."""
+        if self.kind == MAX_THROUGHPUT:
+            return r.t_iter
+        return r.cost_per_iter
+
+    def better(self, a: Optional[SimResult], b: SimResult) -> bool:
+        """Is b better than a (both assumed to satisfy constraints)?"""
+        if a is None:
+            return True
+        return self.score(b) < self.score(a)

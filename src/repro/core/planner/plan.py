@@ -1,0 +1,111 @@
+"""Parallelization-plan data model (paper §4.2).
+
+A plan is: P pipeline stages, a (uniform) data-parallel degree D, and for
+every stage the D replicas — each replica a ``(gpu_type, tp, zone)`` tuple
+(heterogeneity lives here: replicas of one stage may use different
+GPU types/TP degrees, and stages may sit in different regions) — plus the
+microbatch size.  The same object feeds the simulator, the benchmarks, and
+the launcher bridge (``to_runtime_plan``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class StageReplica:
+    gpu_type: str
+    tp: int
+    zone: str
+
+    @property
+    def n_chips(self) -> int:
+        return self.tp
+
+
+@dataclasses.dataclass(frozen=True)
+class StageConfig:
+    layer_start: int
+    layer_end: int              # exclusive
+    replicas: Tuple[StageReplica, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return self.layer_end - self.layer_start
+
+    @property
+    def dp(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def n_chips(self) -> int:
+        return sum(r.n_chips for r in self.replicas)
+
+    def zones(self) -> List[str]:
+        return sorted({r.zone for r in self.replicas})
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelPlan:
+    stages: Tuple[StageConfig, ...]
+    mbs: int                    # microbatch size (sequences)
+    global_batch: int
+
+    @property
+    def pp(self) -> int:
+        return len(self.stages)
+
+    @property
+    def dp(self) -> int:
+        return self.stages[0].dp
+
+    @property
+    def num_microbatches(self) -> int:
+        return self.global_batch // (self.dp * self.mbs)
+
+    @property
+    def n_chips(self) -> int:
+        return sum(s.n_chips for s in self.stages)
+
+    def chips_by_type(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for s in self.stages:
+            for r in s.replicas:
+                out[r.gpu_type] = out.get(r.gpu_type, 0) + r.n_chips
+        return out
+
+    def validate(self) -> None:
+        assert self.stages, "empty plan"
+        d = self.dp
+        for s in self.stages:
+            assert s.dp == d, "paper H: uniform data parallelism per stage"
+        assert self.global_batch % (d * self.mbs) == 0, \
+            (self.global_batch, d, self.mbs)
+
+    def describe(self) -> str:
+        lines = [f"P={self.pp} D={self.dp} mbs={self.mbs} "
+                 f"n_micro={self.num_microbatches} chips={self.n_chips}"]
+        for i, s in enumerate(self.stages):
+            kinds: Dict[Tuple[str, int, str], int] = {}
+            for r in s.replicas:
+                key = (r.gpu_type, r.tp, r.zone)
+                kinds[key] = kinds.get(key, 0) + 1
+            desc = ", ".join(f"{n}x({g},tp={t},{z})"
+                             for (g, t, z), n in sorted(kinds.items()))
+            lines.append(f"  stage{i} L[{s.layer_start}:{s.layer_end}) {desc}")
+        return "\n".join(lines)
+
+
+def homogeneous_plan(gpu_type: str, zone: str, pp: int, dp: int, tp: int,
+                     n_layers: int, mbs: int, global_batch: int
+                     ) -> ParallelPlan:
+    """Uniform plan helper (what homogeneous baselines emit)."""
+    per = n_layers // pp
+    bounds = [i * per for i in range(pp)] + [n_layers]
+    stages = tuple(
+        StageConfig(bounds[i], bounds[i + 1],
+                    tuple(StageReplica(gpu_type, tp, zone)
+                          for _ in range(dp)))
+        for i in range(pp))
+    return ParallelPlan(stages=stages, mbs=mbs, global_batch=global_batch)

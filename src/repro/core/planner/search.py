@@ -1,0 +1,214 @@
+"""Sailor planner: outer search loop (paper §4.2).
+
+Iterates pipeline degree x layer split x microbatch size x data-parallel
+degree (ordered per H3/H4), invokes the DP solver per candidate, evaluates
+survivors with the full simulator, and returns the best plan for the
+objective under constraints — in seconds, for hundreds of chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.cluster import ClusterSpec
+from repro.core.planner import heuristics as H
+from repro.core.planner.dp_solver import DPSolver, Partial, StageChoice
+from repro.core.planner.objectives import (MAX_THROUGHPUT, MIN_COST,
+                                           Objective)
+from repro.core.planner.plan import (ParallelPlan, StageConfig, StageReplica)
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.simulator import memory as mem_mod
+from repro.core.simulator.simulate import SimResult, simulate
+
+
+@dataclasses.dataclass
+class PlanResult:
+    best: Optional[SimResult]
+    search_time_s: float
+    n_candidates: int            # DP invocations
+    n_evaluated: int             # full simulator evaluations
+    n_oom: int                   # candidates rejected by the memory model
+    stats: Dict
+
+
+def _materialize(profile: JobProfile, choices: List[StageChoice],
+                 regions: List[str], cluster: ClusterSpec,
+                 splits, mbs: int, d: int) -> ParallelPlan:
+    """Turn DP choices into a concrete plan with zone placement (H6:
+    fill zones of the chosen region in capacity order)."""
+    stages = []
+    zone_used: Dict[Tuple[str, str], int] = {}
+    for (lo, hi), choice in zip(splits, choices):
+        region = regions[choice.region_idx]
+        zones = sorted(cluster.zones_in_region(region),
+                       key=lambda z: -sum(z.capacity.values()))
+        reps: List[StageReplica] = []
+        for gpu_type, tp, n in sorted(choice.counts):
+            for _ in range(n):
+                placed = False
+                for z in zones:
+                    used = zone_used.get((z.name, gpu_type), 0)
+                    if used + tp <= z.capacity.get(gpu_type, 0):
+                        zone_used[(z.name, gpu_type)] = used + tp
+                        reps.append(StageReplica(gpu_type, tp, z.name))
+                        placed = True
+                        break
+                if not placed:   # H6 pooled capacity guaranteed this fits
+                    z = zones[0]
+                    zone_used[(z.name, gpu_type)] = \
+                        zone_used.get((z.name, gpu_type), 0) + tp
+                    reps.append(StageReplica(gpu_type, tp, z.name))
+        # order replicas slowest-last for deterministic p2p pairing
+        stages.append(StageConfig(lo, hi, tuple(reps)))
+    return ParallelPlan(stages=tuple(stages), mbs=mbs,
+                        global_batch=profile.job.global_batch)
+
+
+class SailorPlanner:
+    def __init__(self, job: TrainJob,
+                 mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM,
+                 max_pp: int = 16, frontier_keep: int = 8,
+                 max_combos: int = 64, use_heuristics: bool = True):
+        self.job = job
+        self.profile = JobProfile(job)
+        self.mem_cfg = mem_cfg
+        self.tp_table = H.TPTable(self.profile, mem_cfg)
+        self.max_pp = max_pp
+        self.frontier_keep = frontier_keep
+        self.max_combos = max_combos
+        self.use_heuristics = use_heuristics
+
+    # -------------------------------------------------------------------------
+    def plan(self, cluster: ClusterSpec, objective: Objective) -> PlanResult:
+        t0 = time.perf_counter()
+        regions, region_caps = H.region_pools(cluster)
+        total_chips = cluster.total_chips()
+        n_layers_units = self.profile.n_partition_units
+        best: Optional[SimResult] = None
+        n_cand = n_eval = n_oom = 0
+        stats: Dict = {"dp_combos": 0, "memo_hits": 0}
+
+        budget = objective.max_cost_per_iter
+        decreasing = objective.kind == MAX_THROUGHPUT   # H3 vs H4
+
+        cluster_types = cluster.gpu_types()
+        for pp in H.pp_candidates(self.job.cfg.n_layers, total_chips,
+                                  self.max_pp):
+            splits = H.balanced_split(self.profile, pp)
+            for mbs in H.mbs_candidates(self.job.global_batch):
+                tp_sel = self._tp_selection(pp, splits, mbs, cluster_types)
+                if tp_sel is None:
+                    n_oom += 1
+                    continue
+                max_d = self._max_d(pp, tp_sel, region_caps)
+                if max_d == 0:
+                    continue
+                d_list = H.dp_candidates(self.job.global_batch, mbs, max_d,
+                                         decreasing)
+                min_chips_per_replica = sum(
+                    min(min(tps) for tps in sel.values()) for sel in tp_sel)
+                prev_score: Optional[float] = None
+                for d in d_list:
+                    if d * min_chips_per_replica > total_chips:
+                        continue             # cannot fit even the cheapest mix
+                    n_cand += 1
+                    # incumbent-driven pruning: best cost so far acts as the
+                    # budget for MIN_COST searches (reuses §4.2.3 machinery)
+                    budget_eff = budget
+                    if objective.kind == MIN_COST and best is not None:
+                        budget_eff = min(budget_eff or 1e30,
+                                         best.cost_per_iter)
+                    if objective.kind == MAX_THROUGHPUT:
+                        tb = best.t_iter if best is not None else None
+                    else:
+                        # MIN_COST: a steady term exceeding the throughput
+                        # floor can never satisfy the constraint
+                        tb = (1.0 / objective.min_throughput
+                              if objective.min_throughput else None)
+                    solver = DPSolver(
+                        self.profile, cluster, splits, mbs, d, tp_sel,
+                        regions, region_caps, budget=budget_eff,
+                        frontier_keep=self.frontier_keep,
+                        max_combos=self.max_combos,
+                        time_bound=tb)
+                    part = solver.best(
+                        kind=("cost" if objective.kind == MIN_COST
+                              else "time"),
+                        max_time=(1.0 / objective.min_throughput
+                                  if objective.min_throughput else None))
+                    stats["dp_combos"] += solver.stats["combos"]
+                    stats["memo_hits"] += solver.stats["memo_hits"]
+                    if part is None:
+                        continue
+                    plan = _materialize(self.profile, solver.decode(part),
+                                        regions, cluster, splits, mbs, d)
+                    res = simulate(self.profile, plan, cluster, self.mem_cfg)
+                    n_eval += 1
+                    if not res.valid:
+                        n_oom += 1
+                        continue
+                    if objective.satisfies(res) and objective.better(best, res):
+                        best = res
+                    # H3/H4 early exit within this (pp, mbs) group
+                    score = objective.score(res)
+                    if self.use_heuristics and prev_score is not None \
+                            and score >= prev_score:
+                        break
+                    prev_score = score
+        return PlanResult(
+            best=best,
+            search_time_s=time.perf_counter() - t0,
+            n_candidates=n_cand, n_evaluated=n_eval, n_oom=n_oom,
+            stats=stats)
+
+    # -------------------------------------------------------------------------
+    def _tp_selection(self, pp: int, splits, mbs: int, types: List[str]
+                      ) -> Optional[List[Dict[str, List[int]]]]:
+        """H2 + scaling: per stage/type, the minimum feasible TP and up to
+        two larger powers of two (paper: "memory constraints and scaling
+        heuristics") — larger TP trades chips for stage speed, which is how
+        heterogeneous pipelines load-balance fast and slow stages."""
+        out: List[Dict[str, List[int]]] = []
+        for i, (lo, hi) in enumerate(splits):
+            sel: Dict[str, List[int]] = {}
+            for t in types:
+                tp = self.tp_table.min_tp(pp, i, lo, hi, mbs, t)
+                if tp is not None:
+                    opts = [tp]
+                    node = H.tp_options(t)[-1]
+                    # scaling heuristic: keep a larger TP only if it buys a
+                    # real speedup (>=1.25x) — else it just burns chips.
+                    while len(opts) < 3 and opts[-1] * 2 <= node:
+                        cur, nxt = opts[-1], opts[-1] * 2
+                        f0, b0, _ = self.profile.stage_cost(lo, hi, t, cur, mbs)
+                        f1, b1, _ = self.profile.stage_cost(lo, hi, t, nxt, mbs)
+                        if (f0 + b0) / max(f1 + b1, 1e-12) < 1.25:
+                            break
+                        opts.append(nxt)
+                    sel[t] = opts
+            if not sel:
+                return None              # no type can host this stage
+            out.append(sel)
+        return out
+
+    def _max_d(self, pp: int, tp_sel, region_caps) -> int:
+        """Optimistic upper bound on D (H5: each stage's D replicas live in
+        one region): min over stages of the best region's replica capacity.
+        Infeasible D values simply produce no DP combos and fall through."""
+        per_stage = []
+        for sel in tp_sel:
+            cap = 0
+            for pool in region_caps:
+                cap = max(cap, sum(pool.get(t, 0) // min(tps)
+                                   for t, tps in sel.items()))
+            per_stage.append(cap)
+        if not per_stage or min(per_stage) == 0:
+            return 0
+        return min(min(per_stage), self.job.global_batch)
+
+
+def plan_for(cfg, cluster: ClusterSpec, objective: Objective,
+             seq_len: int, global_batch: int, **kw) -> PlanResult:
+    job = TrainJob(cfg=cfg, seq_len=seq_len, global_batch=global_batch)
+    return SailorPlanner(job, **kw).plan(cluster, objective)

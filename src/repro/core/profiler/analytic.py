@@ -1,0 +1,173 @@
+"""Analytic training-job profile (the TPU-adapted Sailor profiler, §4.1).
+
+The paper profiles one node of each GPU type with torch hooks (fwd/bwd/
+update time per layer, per TP degree and microbatch size).  On this rig the
+same *profile format* is produced analytically from the architecture config
+and the accelerator catalog — a roofline model per layer:
+
+    t = max(FLOPs / (peak * efficiency), bytes / mem_bw) + TP collectives
+
+Because repeated layers are reduced to one instance (exactly the paper's
+trick), a profile is O(3) layer kinds per arch: ``embed``, ``block`` (xL),
+``head`` (plus hybrid's shared block).  ``measured.py`` can overwrite the
+efficiency constant of ``cpu-host`` with real wall-clock calibration so the
+simulator can be validated against actual step times on this container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+from repro.core.profiler.hw_specs import (AcceleratorSpec, LinkSpec,
+                                          get_accelerator)
+from repro.core.simulator import network
+from repro.models.config import ModelConfig
+
+DTYPE_BYTES = 2          # bf16 compute dtype
+GRAD_BYTES = 4           # fp32 grad accumulation
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    """Cost of ONE layer instance for a given (gpu, tp, mbs)."""
+    fwd: float                 # seconds
+    bwd: float
+    update: float
+    params: int                # full (unsharded) parameter count
+    act_out_bytes: int         # p2p payload leaving this layer per microbatch
+    act_store_bytes: int       # stored activation bytes per microbatch (remat-aware)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainJob:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    remat: str = "full"        # matches runtime default
+
+
+class JobProfile:
+    """Layer-kind cost tables for one training job."""
+
+    def __init__(self, job: TrainJob):
+        self.job = job
+        self.cfg = job.cfg
+
+    # --- layer inventory -----------------------------------------------------
+    def layer_kinds(self) -> List[str]:
+        """The unrolled layer sequence the planner partitions over."""
+        return ["embed"] + ["block"] * self.cfg.n_layers + ["head"]
+
+    # --- per-layer primitives ---------------------------------------------------
+    def _block_flops_per_token(self) -> float:
+        cfg = self.cfg
+        s = self.job.seq_len
+        if cfg.family in ("ssm", "hybrid"):
+            matmul = 2 * cfg.ssm_layer_params()
+            # SSD chunked term ~ O(S * chunk) per token
+            ssd = 4 * cfg.ssm_chunk * cfg.ssm_nheads * cfg.ssm_headdim
+            flops = matmul + ssd
+            if cfg.family == "hybrid":
+                shared = (2 * (cfg.attn_params() + cfg.ffn_params())
+                          + 4 * min(s, 10 ** 9) * cfg.n_heads * cfg.hd * 0.5)
+                flops += shared / cfg.attn_every
+            return flops
+        active = (cfg.attn_params()
+                  + (cfg.top_k * cfg.ffn_params()
+                     + cfg.d_model * cfg.n_experts
+                     if cfg.family == "moe" else cfg.ffn_params()))
+        matmul = 2 * active
+        attn_span = min(s, cfg.window) if cfg.window else s
+        attn = 4 * attn_span * cfg.n_heads * cfg.hd * (0.5 if not cfg.window else 1.0)
+        return matmul + attn
+
+    def _layer_params(self, kind: str) -> int:
+        cfg = self.cfg
+        if kind == "embed":
+            return cfg.vocab_size * cfg.d_model
+        if kind == "head":
+            return (0 if cfg.tie_embeddings
+                    else cfg.vocab_size * cfg.d_model) + cfg.d_model
+        return cfg.layer_params() + (
+            cfg.shared_attn_params() // max(cfg.attn_every, 1)
+            if cfg.family == "hybrid" else 0)
+
+    def _layer_flops_per_token(self, kind: str) -> float:
+        cfg = self.cfg
+        if kind == "embed":
+            return 0.0                       # gather, bytes-bound
+        if kind == "head":
+            return 2 * cfg.d_model * cfg.vocab_size
+        return self._block_flops_per_token()
+
+    def _act_store_bytes(self, kind: str, mbs: int) -> int:
+        cfg = self.cfg
+        s = self.job.seq_len
+        boundary = mbs * s * cfg.d_model * DTYPE_BYTES
+        if self.job.remat == "full" or kind != "block":
+            return boundary
+        # no remat: all intermediates
+        h, kv, hd, f = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+        inner = (2 * cfg.d_model + (h + 2 * kv) * hd + 3 * f)
+        return mbs * s * inner * DTYPE_BYTES
+
+    # --- the profile entry ------------------------------------------------------
+    @functools.lru_cache(maxsize=100_000)
+    def cost(self, kind: str, gpu_type: str, tp: int, mbs: int) -> LayerCost:
+        cfg = self.cfg
+        acc = get_accelerator(gpu_type)
+        s = self.job.seq_len
+        tokens = mbs * s
+        flops = self._layer_flops_per_token(kind) * tokens / tp
+        params = self._layer_params(kind)
+        # bytes moved: weights once + activations in/out
+        w_bytes = params * DTYPE_BYTES / tp
+        a_bytes = 2 * tokens * cfg.d_model * DTYPE_BYTES
+        t_compute = max(flops / (acc.peak_flops * acc.efficiency),
+                        (w_bytes + a_bytes) / acc.mem_bw)
+        # Megatron TP collectives: 2 all-reduces of the activation per
+        # block fwd (bwd doubles), over the intra-node fabric.
+        t_tp = 0.0
+        if tp > 1 and kind == "block":
+            link = LinkSpec(f"intra-{gpu_type}", alpha=5e-6,
+                            beta=acc.intra_node_bw)
+            t_tp = 2 * network.all_reduce_time(
+                link, tokens * cfg.d_model * DTYPE_BYTES, tp)
+        fwd = t_compute + t_tp
+        bwd = 2 * t_compute + 2 * t_tp
+        upd = params / tp * 20 / acc.mem_bw    # read p,g,m,v + write p,m,v
+        return LayerCost(
+            fwd=fwd, bwd=bwd, update=upd, params=params,
+            act_out_bytes=tokens * cfg.d_model * DTYPE_BYTES,
+            act_store_bytes=self._act_store_bytes(kind, mbs))
+
+    # --- aggregates used by planner/simulator ------------------------------------
+    def stage_cost(self, layer_lo: int, layer_hi: int, gpu_type: str,
+                   tp: int, mbs: int) -> Tuple[float, float, float]:
+        """(fwd, bwd, update) seconds for layers [lo, hi) of the unrolled
+        sequence (0 = embed, 1..L = blocks, L+1 = head)."""
+        kinds = self.layer_kinds()
+        fwd = bwd = upd = 0.0
+        for k in kinds[layer_lo:layer_hi]:
+            c = self.cost(k, gpu_type, tp, mbs)
+            fwd += c.fwd
+            bwd += c.bwd
+            upd += c.update
+        return fwd, bwd, upd
+
+    def stage_params(self, layer_lo: int, layer_hi: int) -> int:
+        kinds = self.layer_kinds()
+        return sum(self._layer_params(k) for k in kinds[layer_lo:layer_hi])
+
+    def stage_act_store(self, layer_lo: int, layer_hi: int, mbs: int) -> int:
+        kinds = self.layer_kinds()
+        return sum(self._act_store_bytes(k, mbs)
+                   for k in kinds[layer_lo:layer_hi])
+
+    def boundary_bytes(self, mbs: int) -> int:
+        return mbs * self.job.seq_len * self.cfg.d_model * DTYPE_BYTES
+
+    @property
+    def n_partition_units(self) -> int:
+        return len(self.layer_kinds())

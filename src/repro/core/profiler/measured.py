@@ -1,0 +1,81 @@
+"""Measured profiling + calibration on the actual host (paper §4.1).
+
+The paper's profiler measures one node per GPU type with CUDA events.  The
+only real device here is the CPU host, so this module:
+
+  1. measures fwd/bwd wall-clock of a single transformer block (repeated
+     layers reduced to one instance, exactly the paper's trick) for a grid
+     of microbatch sizes,
+  2. fits the ``cpu-host`` AcceleratorSpec's effective FLOP/s to those
+     measurements (least squares over the grid),
+  3. returns a calibrated AcceleratorSpec to drop into the catalog, after
+     which the analytic profile *is* a measured profile for cpu-host.
+
+benchmarks/simulator_accuracy.py uses this to validate the simulator's
+iteration-time estimates against real measured multi-device step times
+(Fig. 5b analog).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profiler.hw_specs import ACCELERATORS, AcceleratorSpec
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+def _time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def measure_block(cfg: ModelConfig, seq_len: int, mbs_grid=(1, 2, 4),
+                  ) -> List[Tuple[int, float, float]]:
+    """Measure (mbs, fwd_s, fwd+bwd_s) for ONE decoder block of ``cfg``."""
+    import dataclasses as dc
+    one = dc.replace(cfg, n_layers=1, vocab_size=min(cfg.vocab_size, 1024),
+                     remat="none", dtype="float32", param_dtype="float32")
+    params = model_lib.init(one, jax.random.PRNGKey(0))
+    out = []
+    for mbs in mbs_grid:
+        batch = {"tokens": jnp.zeros((mbs, seq_len), jnp.int32),
+                 "labels": jnp.zeros((mbs, seq_len), jnp.int32)}
+        if one.family == "encdec":
+            batch["frames"] = jnp.zeros((mbs, one.n_frames, one.d_model))
+        if one.family == "vlm":
+            batch["patches"] = jnp.zeros((mbs, one.n_patches, one.d_model))
+        fwd = jax.jit(lambda p, b: model_lib.forward(one, p, b))
+        both = jax.jit(jax.grad(
+            lambda p, b: model_lib.loss_fn(one, p, b)[0]))
+        t_f = _time_fn(fwd, params, batch)
+        t_fb = _time_fn(both, params, batch)
+        out.append((mbs, t_f, t_fb))
+    return out
+
+
+def calibrate_cpu_host(cfg: ModelConfig, seq_len: int = 128) -> AcceleratorSpec:
+    """Fit cpu-host effective FLOP/s from measured block times."""
+    meas = measure_block(cfg, seq_len)
+    flops_per_tok = 2 * cfg.layer_params()
+    effs = []
+    for mbs, t_f, t_fb in meas:
+        fl = flops_per_tok * mbs * seq_len
+        effs.append(fl / max(t_f, 1e-9))
+        effs.append(3 * fl / max(t_fb, 1e-9))
+    eff_flops = float(np.median(effs))
+    base = ACCELERATORS["cpu-host"]
+    return dataclasses.replace(base, peak_flops=eff_flops, efficiency=1.0)
+
+
+def register_calibrated(spec: AcceleratorSpec, name: str = "cpu-host") -> None:
+    ACCELERATORS[name] = dataclasses.replace(spec, name=name)

@@ -1,0 +1,58 @@
+"""Monetary cost per iteration (paper §4.3):  C_iter = C_comp + C_comm.
+
+C_comp = sum_i (N_i * price_i) * T_iter  over all chips in the plan.
+C_comm = sum_zone-pairs bytes_ij * egress_price_ij, counting pipeline p2p
+(activations fwd + gradients bwd, per microbatch, per replica) and any DP
+all-reduce rings that cross zone boundaries (ring traffic crosses the
+boundary twice per direction).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.cluster import ClusterSpec
+from repro.core.planner.plan import ParallelPlan
+from repro.core.profiler.analytic import DTYPE_BYTES, JobProfile
+
+
+def compute_cost(plan: ParallelPlan, cluster: ClusterSpec,
+                 t_iter: float) -> float:
+    total_rate = 0.0
+    for st in plan.stages:
+        for rep in st.replicas:
+            z = cluster.zone(rep.zone)
+            total_rate += rep.n_chips * z.price_per_sec(rep.gpu_type)
+    return total_rate * t_iter
+
+
+def comm_cost(profile: JobProfile, plan: ParallelPlan,
+              cluster: ClusterSpec) -> float:
+    cost = 0.0
+    n_micro = plan.num_microbatches
+    act = profile.boundary_bytes(plan.mbs)
+    # pipeline p2p across zones: fwd activation + bwd gradient per microbatch
+    for i in range(plan.pp - 1):
+        for d in range(plan.dp):
+            z_a = plan.stages[i].replicas[d].zone
+            z_b = plan.stages[i + 1].replicas[d].zone
+            price = cluster.egress_price(z_a, z_b)
+            if price > 0:
+                cost += 2 * act * n_micro * price
+    # DP sync rings crossing zones: 2 x payload per boundary crossing
+    for i, st in enumerate(plan.stages):
+        zones = st.zones()
+        if len(zones) > 1:
+            params = profile.stage_params(st.layer_start, st.layer_end)
+            tp_min = min(r.tp for r in st.replicas)
+            nbytes = params / tp_min * DTYPE_BYTES
+            worst = max(cluster.egress_price(a, b)
+                        for a in zones for b in zones if a != b)
+            cost += 2 * 2 * nbytes * worst
+    return cost
+
+
+def iteration_cost(profile: JobProfile, plan: ParallelPlan,
+                   cluster: ClusterSpec, t_iter: float) -> Dict[str, float]:
+    comp = compute_cost(plan, cluster, t_iter)
+    comm = comm_cost(profile, plan, cluster)
+    return {"comp": comp, "comm": comm, "total": comp + comm}

@@ -1,0 +1,117 @@
+"""Per-worker peak-memory model (paper §4.3, validated like Fig. 3/5a).
+
+    M_peak = M_model + M_activation (+ comm buffers, fragmentation)
+
+``M_model = stage_params / tp * mul_factor`` where mul_factor covers the
+copies the paper lists [41]: parameters + gradients + optimizer moments.
+Our runtime keeps bf16 params (2B) + fp32 grads (4B) + fp32 m,v (8B)
+= 14 B/param; Megatron-style fp32 master adds 4 more.
+
+``M_activation`` is per-worker and stage-dependent (the paper's key point
+versus prior work): under 1F1B stage i keeps ``P - i`` microbatches of
+stored activations in flight, each remat-dependent, sharded by TP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.core.planner.plan import ParallelPlan, StageConfig
+from repro.core.profiler.analytic import GRAD_BYTES, DTYPE_BYTES, JobProfile
+from repro.core.profiler.hw_specs import get_accelerator
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryModelConfig:
+    param_bytes: int = 2            # bf16 params
+    grad_bytes: int = 4             # fp32 grads
+    opt_bytes: int = 8              # adam m+v fp32
+    master_bytes: int = 0           # optional fp32 master copy
+    fragmentation: float = 1.05
+    runtime_overhead: float = 0.75e9   # allocator/runtime fixed cost
+
+    @property
+    def mul_factor(self) -> int:
+        return (self.param_bytes + self.grad_bytes + self.opt_bytes
+                + self.master_bytes)
+
+
+DEFAULT_MEM = MemoryModelConfig()
+
+
+def worker_peak_bytes(profile: JobProfile, plan: ParallelPlan,
+                      stage_idx: int, tp: int,
+                      mem_cfg: MemoryModelConfig = DEFAULT_MEM) -> float:
+    """Peak bytes for ONE worker (one TP shard of one replica) of a stage."""
+    stage = plan.stages[stage_idx]
+    params = profile.stage_params(stage.layer_start, stage.layer_end)
+    m_model = params / tp * mem_cfg.mul_factor
+
+    # 1F1B: stage i holds (P - i) microbatches of stored activations.
+    in_flight = plan.pp - stage_idx
+    act_per_micro = profile.stage_act_store(
+        stage.layer_start, stage.layer_end, plan.mbs) / tp
+    # plus the live working set of one layer being recomputed/executed
+    cfg = profile.cfg
+    inner_mult = 12  # qkv+ffn intermediates of the widest layer, heuristic
+    working = plan.mbs * profile.job.seq_len * cfg.d_model * DTYPE_BYTES \
+        * inner_mult / tp
+    m_act = in_flight * act_per_micro + working
+
+    # comm buffers: p2p send/recv + a DP gradient bucket
+    m_comm = 2 * profile.boundary_bytes(plan.mbs) / tp \
+        + 0.1 * params / tp * mem_cfg.grad_bytes
+
+    peak = (m_model + m_act + m_comm) * mem_cfg.fragmentation \
+        + mem_cfg.runtime_overhead
+    return peak
+
+
+def plan_memory(profile: JobProfile, plan: ParallelPlan,
+                mem_cfg: MemoryModelConfig = DEFAULT_MEM
+                ) -> List[List[Dict]]:
+    """Per stage, per replica: {'gpu_type','tp','peak','capacity','ok'}."""
+    out: List[List[Dict]] = []
+    for i, stage in enumerate(plan.stages):
+        row = []
+        for rep in stage.replicas:
+            peak = worker_peak_bytes(profile, plan, i, rep.tp, mem_cfg)
+            cap = get_accelerator(rep.gpu_type).mem_bytes
+            row.append({"gpu_type": rep.gpu_type, "tp": rep.tp,
+                        "peak": peak, "capacity": cap,
+                        "ok": peak <= cap})
+        out.append(row)
+    return out
+
+
+def plan_fits(profile: JobProfile, plan: ParallelPlan,
+              mem_cfg: MemoryModelConfig = DEFAULT_MEM) -> bool:
+    return all(r["ok"] for row in plan_memory(profile, plan, mem_cfg)
+               for r in row)
+
+
+def min_tp_for_stage(profile: JobProfile, plan_pp: int, stage_idx: int,
+                     layer_lo: int, layer_hi: int, mbs: int,
+                     gpu_type: str, tp_options,
+                     mem_cfg: MemoryModelConfig = DEFAULT_MEM):
+    """Paper H2: smallest TP of ``gpu_type`` that avoids OOM for this stage.
+
+    Independent of cluster availability, so the planner precomputes and
+    reuses it across availability changes (the paper notes exactly this).
+    Returns None if even max TP does not fit."""
+    acc = get_accelerator(gpu_type)
+    params = profile.stage_params(layer_lo, layer_hi)
+    in_flight = plan_pp - stage_idx
+    act = profile.stage_act_store(layer_lo, layer_hi, mbs)
+    cfg = profile.cfg
+    working = mbs * profile.job.seq_len * cfg.d_model * DTYPE_BYTES * 12
+    for tp in sorted(tp_options):
+        m_model = params / tp * mem_cfg.mul_factor
+        m_act = in_flight * act / tp + working / tp
+        m_comm = 2 * profile.boundary_bytes(mbs) / tp \
+            + 0.1 * params / tp * mem_cfg.grad_bytes
+        peak = (m_model + m_act + m_comm) * mem_cfg.fragmentation \
+            + mem_cfg.runtime_overhead
+        if peak <= acc.mem_bytes:
+            return tp
+    return None

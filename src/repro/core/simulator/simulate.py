@@ -1,0 +1,55 @@
+"""Simulator facade (paper Fig. 4 component 3).
+
+``simulate(profile, plan, cluster)`` -> SimResult with iteration time,
+per-worker peak memory + OOM validity, and $/iteration.  The planner calls
+this to rank candidates; the benchmarks call it to evaluate *every*
+baseline's plans under one consistent model (the paper's §5.2 methodology).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.cluster import ClusterSpec
+from repro.core.planner.plan import ParallelPlan
+from repro.core.profiler.analytic import JobProfile
+from repro.core.simulator import cost as cost_mod
+from repro.core.simulator import memory as mem_mod
+from repro.core.simulator import timing as time_mod
+
+
+@dataclasses.dataclass
+class SimResult:
+    plan: ParallelPlan
+    valid: bool                  # memory-feasible (no OOM on any worker)
+    t_iter: float
+    throughput: float            # iterations / second
+    samples_per_s: float
+    cost_per_iter: float
+    cost_comp: float
+    cost_comm: float
+    peak_mem: List[List[Dict]]   # per stage, per replica
+    timing: time_mod.TimingBreakdown
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.samples_per_s * self.plan_seq_len
+
+    plan_seq_len: int = 0
+
+
+def simulate(profile: JobProfile, plan: ParallelPlan,
+             cluster: ClusterSpec,
+             mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM
+             ) -> SimResult:
+    plan.validate()
+    mem = mem_mod.plan_memory(profile, plan, mem_cfg)
+    valid = all(r["ok"] for row in mem for r in row)
+    t = time_mod.iteration_time(profile, plan, cluster)
+    c = cost_mod.iteration_cost(profile, plan, cluster, t.t_iter)
+    return SimResult(
+        plan=plan, valid=valid, t_iter=t.t_iter,
+        throughput=1.0 / t.t_iter,
+        samples_per_s=plan.global_batch / t.t_iter,
+        cost_per_iter=c["total"], cost_comp=c["comp"], cost_comm=c["comm"],
+        peak_mem=mem, timing=t, plan_seq_len=profile.job.seq_len)

@@ -1,0 +1,119 @@
+"""1F1B iteration-time model with stragglers (paper §4.3, following [50]).
+
+    T_iter = max_d(T_pp_d) + max_i(T_sync_i) + T_update
+
+Per pipeline replica d: warmup+cooldown = one fwd+bwd through every stage,
+steady phase = (N_micro - 1) x the straggler stage (slowest fwd+bwd +
+inter-stage p2p).  Heterogeneity enters through (a) per-replica GPU types /
+TP degrees changing stage compute times, and (b) zone placement changing
+link classes for p2p and DP sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.cluster import ClusterSpec
+from repro.core.planner.plan import ParallelPlan
+from repro.core.profiler.analytic import DTYPE_BYTES, GRAD_BYTES, JobProfile
+from repro.core.simulator import network
+
+
+@dataclasses.dataclass
+class TimingBreakdown:
+    t_iter: float
+    t_pp: float                 # max over pipelines
+    t_sync: float               # max over stages
+    t_update: float
+    straggler_stage: int
+    straggler_pipeline: int
+    per_stage_fwd_bwd: List[float]
+    p2p: List[float]
+
+
+def _stage_time(profile: JobProfile, plan: ParallelPlan, stage_idx: int,
+                replica_idx: int) -> Dict[str, float]:
+    st = plan.stages[stage_idx]
+    rep = st.replicas[replica_idx]
+    fwd, bwd, upd = profile.stage_cost(
+        st.layer_start, st.layer_end, rep.gpu_type, rep.tp, plan.mbs)
+    return {"fwd": fwd, "bwd": bwd, "update": upd}
+
+
+def _p2p_time(profile: JobProfile, plan: ParallelPlan, cluster: ClusterSpec,
+              stage_idx: int, replica_idx: int) -> float:
+    """Activation transfer stage i -> i+1 for one microbatch."""
+    if stage_idx >= plan.pp - 1:
+        return 0.0
+    z_a = plan.stages[stage_idx].replicas[replica_idx].zone
+    z_b = plan.stages[stage_idx + 1].replicas[replica_idx].zone
+    link = cluster.link_between(z_a, z_b)
+    return network.p2p_time(link, profile.boundary_bytes(plan.mbs))
+
+
+def pipeline_time(profile: JobProfile, plan: ParallelPlan,
+                  cluster: ClusterSpec, replica_idx: int) -> Dict:
+    """1F1B time of pipeline ``replica_idx`` (one DP replica chain)."""
+    n_micro = plan.num_microbatches
+    per_stage = []
+    p2ps = []
+    for i in range(plan.pp):
+        t = _stage_time(profile, plan, i, replica_idx)
+        p2p = _p2p_time(profile, plan, cluster, i, replica_idx)
+        per_stage.append(t["fwd"] + t["bwd"])
+        p2ps.append(p2p)
+    warmup_cooldown = sum(per_stage) + 2 * sum(p2ps)
+    steady_unit = max(s + 2 * p for s, p in zip(per_stage, p2ps))
+    straggler_stage = max(range(plan.pp),
+                          key=lambda i: per_stage[i] + 2 * p2ps[i])
+    t_pp = warmup_cooldown + max(n_micro - 1, 0) * steady_unit
+    return {"t_pp": t_pp, "per_stage": per_stage, "p2p": p2ps,
+            "straggler_stage": straggler_stage, "steady_unit": steady_unit}
+
+
+def sync_time(profile: JobProfile, plan: ParallelPlan,
+              cluster: ClusterSpec, stage_idx: int) -> float:
+    """DP gradient all-reduce across the D replicas of one stage.
+
+    Bytes = stage grad bytes / tp (each TP shard syncs with its peers).
+    The link class is the slowest among replica-pair zones (paper: the
+    synchronization bottleneck); hierarchical reduction applies when all
+    replicas share a zone but span nodes."""
+    st = plan.stages[stage_idx]
+    d = st.dp
+    if d <= 1:
+        return 0.0
+    params = profile.stage_params(st.layer_start, st.layer_end)
+    tp_min = min(r.tp for r in st.replicas)
+    nbytes = params / tp_min * DTYPE_BYTES   # bf16 ring all-reduce payload
+    zones = st.zones()
+    if len(zones) == 1:
+        link = cluster.links["intra-zone"]
+    else:
+        link = max((cluster.link_between(a, b)
+                    for a in zones for b in zones if a != b),
+                   key=lambda l: 1.0 / l.beta)
+    return network.all_reduce_time(link, nbytes, d)
+
+
+def iteration_time(profile: JobProfile, plan: ParallelPlan,
+                   cluster: ClusterSpec) -> TimingBreakdown:
+    pls = [pipeline_time(profile, plan, cluster, d) for d in range(plan.dp)]
+    worst = max(range(plan.dp), key=lambda d: pls[d]["t_pp"])
+    t_pp = pls[worst]["t_pp"]
+    syncs = [sync_time(profile, plan, cluster, i) for i in range(plan.pp)]
+    t_sync = max(syncs) if syncs else 0.0
+    # update: slowest worker's optimizer step
+    t_update = 0.0
+    for i, st in enumerate(plan.stages):
+        for rep in st.replicas:
+            _, _, upd = profile.stage_cost(
+                st.layer_start, st.layer_end, rep.gpu_type, rep.tp, plan.mbs)
+            t_update = max(t_update, upd)
+    return TimingBreakdown(
+        t_iter=t_pp + t_sync + t_update,
+        t_pp=t_pp, t_sync=t_sync, t_update=t_update,
+        straggler_stage=pls[worst]["straggler_stage"],
+        straggler_pipeline=worst,
+        per_stage_fwd_bwd=pls[worst]["per_stage"],
+        p2p=pls[worst]["p2p"])

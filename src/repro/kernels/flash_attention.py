@@ -1,0 +1,125 @@
+"""Flash attention Pallas kernel (TPU target, interpret-validated on CPU).
+
+Blockwise online-softmax attention (Flash-Attention-2 recurrence) tiled for
+the TPU memory hierarchy:
+
+  * grid = (batch*heads, q_blocks, kv_blocks); the kv dimension is minor
+    (sequential on a TensorCore), so the fp32 accumulators for one q block
+    live in VMEM scratch across the kv sweep.
+  * BlockSpecs stage (block_q x head_dim) / (block_k x head_dim) tiles of
+    Q/K/V from HBM into VMEM; head_dim (64/80/128 here) stays unsplit so
+    the MXU sees full contraction dims; block sizes default to 128 —
+    MXU-aligned (128x128 systolic array).
+  * causal masking is done with iota comparisons inside the block; blocks
+    entirely above the diagonal are skipped via ``pl.when`` (the FLOP
+    saving XLA's dense attention cannot express).
+
+The kernel computes one (q_block, head) tile per grid step:
+    m_new = max(m, rowmax(S));  l = l*corr + rowsum(P);  acc = acc*corr + P V
+with S = Q K^T / sqrt(d) in fp32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:                                     # TPU scratch namespace
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:                        # pragma: no cover
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            block_q: int, block_k: int, causal: bool, scale: float,
+            n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(k_pos > q_pos, NEG_INF, s)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the diagonal
+        pl.when(ki * block_k <= qi * block_q + block_q - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False
+                    ) -> jax.Array:
+    """q, k, v: (BH, S, D) with equal head counts (GQA handled in ops.py)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kern = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, causal=causal,
+        scale=scale, n_kv_blocks=nk)
+    scratch = [
+        _VMEM((block_q, d), jnp.float32),
+        _VMEM((block_q,), jnp.float32),
+        _VMEM((block_q,), jnp.float32),
+    ] if _VMEM is not None else [
+        pl.MemorySpace.ANY,  # pragma: no cover (non-TPU build)
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,48 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles layout adaptation (model tensors are (B, S, H, D); kernels take
+flattened (B*H, S, D)), GQA head replication, and the interpret-mode
+fallback: on a CPU backend (this container) kernels execute via
+``interpret=True``, which runs the same kernel body under the Pallas
+interpreter — numerics identical, used by tests; on TPU they compile to
+Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import rmsnorm as rn
+from repro.kernels import ssd as ssd_mod
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, K, D) with H % K == 0 -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    kheads = k.shape[2]
+    if kheads != h:                       # GQA: replicate KV heads
+        rep = h // kheads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    o = fa.flash_attention(qt, kt, vt, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=_interpret())
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128):
+    return ssd_mod.ssd_scan(x, dt, a, b, c, chunk=chunk,
+                            interpret=_interpret())
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5):
+    return rn.rmsnorm(x, scale, eps=eps, interpret=_interpret())

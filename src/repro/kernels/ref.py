@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Self-contained on purpose: these are the ground truth the kernels are swept
+against in tests/test_kernels.py, independent of the model code.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D). fp32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (fp32).
+
+    x: (B, S, H, P); dt: (B, S, H) (positive); a: (H,) negative;
+    b, c: (B, S, N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp
+        dec = jnp.exp(dtt.astype(f32) * a)                    # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt.astype(f32),
+                         xt.astype(f32), bt.astype(f32))
+        st = dec[..., None, None] * st + upd
+        yt = jnp.einsum("bn,bhpn->bhp", ct.astype(f32), st)
+        return st, yt
+
+    st0 = jnp.zeros((bs, h, p, n), f32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    st, ys = jax.lax.scan(step, st0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), st
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,127 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel (TPU target).
+
+State-space duality (arXiv:2405.21060): within a chunk the output is an
+"attention-like" quadratic form; across chunks a recurrent state (P x N)
+flows.  TPU mapping:
+
+  * grid = (batch, heads, n_chunks); chunks are the minor (sequential)
+    dimension, so the running state lives in VMEM scratch across the chunk
+    sweep for one (batch, head) — the recurrence never touches HBM.
+  * per grid step the kernel stages (chunk x P) inputs and (chunk x N)
+    B/C projections into VMEM; the two einsums (scores C·B^T and the
+    state update x^T·B) are MXU matmuls; decay weights are VPU elementwise.
+  * chunk length defaults to 128 (MXU-aligned); P=64..128, N=64..128 fit
+    VMEM comfortably: working set ~ chunk*(P+2N)*4B + P*N*4B ≈ 200 KB.
+
+Outputs y(chunk x P) plus the final state per (b, h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:                         # pragma: no cover
+    _VMEM = None
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref,
+            *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)      # (Q,)
+    a = a_ref[0]                                  # scalar decay rate (<0)
+    b = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+
+    da = dt * a                                   # (Q,)
+    cum = jnp.cumsum(da)                          # (Q,)
+    # within-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ldec = jnp.where(iota_i >= iota_j, jnp.exp(li), 0.0)
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (Q, Q)
+    w = scores * ldec * dt[None, :]                # weight on x_j
+    y_diag = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (Q, P)
+
+    # cross-chunk: y_off = (C decayed) @ state^T  (state: (P, N))
+    st = state_ref[...]
+    c_dec = c * jnp.exp(cum)[:, None]
+    y_off = jax.lax.dot_general(
+        c_dec, st, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (Q, P)
+    y_ref[0, 0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: state = exp(cum_last) * state + sum_j w_j x_j b_j^T
+    dec_end = jnp.exp(cum[-1] - cum) * dt          # (Q,)
+    xw = x * dec_end[:, None]                      # (Q, P)
+    upd = jax.lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (P, N)
+    state_ref[...] = jnp.exp(cum[-1]) * st + upd
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        st_out_ref[0, 0] = state_ref[...].astype(st_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128,
+             interpret: bool = False):
+    """x: (B, S, H, P); dt: (B, S, H); a: (H,); b, c: (B, S, N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  S % chunk == 0."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    # layout: (B, H, nc, Q, ...) so (b, h) are grid-major, chunks minor
+    xr = x.transpose(0, 2, 1, 3).reshape(bs, h, nc, chunk, p)
+    dtr = dt.transpose(0, 2, 1).reshape(bs, h, nc, chunk)
+    br = b.reshape(bs, nc, chunk, n)
+    cr = c.reshape(bs, nc, chunk, n)
+
+    kern = functools.partial(_kernel, chunk=chunk, n_chunks=nc)
+    scratch = [_VMEM((p, n), jnp.float32)] if _VMEM is not None else []
+    y, st = pl.pallas_call(
+        kern,
+        grid=(bs, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p),
+                         lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, h, nc, chunk, p), x.dtype),
+            jax.ShapeDtypeStruct((bs, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xr, dtr, a.astype(jnp.float32), br, cr)
+    y = y.reshape(bs, h, s, p).transpose(0, 2, 1, 3)
+    return y, st

@@ -1,0 +1,109 @@
+"""Post-SPMD HLO analysis: collective traffic extraction.
+
+``collective_bytes`` parses the compiled (per-device) HLO text and sums the
+result-shape bytes of every collective op, grouped by op kind.  Ring-scaled
+traffic estimates feed the §Roofline collective term:
+
+    all-reduce       2 (k-1)/k * bytes     (k = replica group size)
+    all-gather       (k-1)/k * bytes       (bytes = gathered result)
+    reduce-scatter   (k-1)/k * bytes(input ~ result*k)
+    all-to-all       (k-1)/k * bytes
+    collective-permute  bytes              (one hop)
+
+Group sizes come from ``replica_groups=[G,S]<=...`` annotations (S = group
+size); old-style explicit lists ``{{0,1},{2,3}}`` are also handled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[\w\[\],\s{}]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # op kind -> (count, raw result bytes, ring-scaled traffic bytes)
+    by_kind: Dict[str, Tuple[int, int, float]]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(v[1] for v in self.by_kind.values())
+
+    @property
+    def total_traffic(self) -> float:
+        return sum(v[2] for v in self.by_kind.values())
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    by_kind: Dict[str, List[float]] = {}
+    for line in hlo_text.splitlines():
+        line = _COMMENT.sub("", line)
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue                    # avoid double count of start/done
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        if nbytes == 0:
+            continue
+        k = _group_size(line)
+        if kind == "all-reduce":
+            traffic = 2.0 * (k - 1) / k * nbytes if k > 1 else 0.0
+        elif kind == "collective-permute":
+            traffic = float(nbytes)
+        else:
+            traffic = (k - 1) / k * nbytes if k > 1 else 0.0
+        cur = by_kind.setdefault(kind, [0, 0, 0.0])
+        cur[0] += 1
+        cur[1] += nbytes
+        cur[2] += traffic
+    return CollectiveStats(
+        by_kind={k: (int(v[0]), int(v[1]), float(v[2]))
+                 for k, v in by_kind.items()})
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    if _SRC_TGT_RE.search(line):
+        return 2
+    return 1

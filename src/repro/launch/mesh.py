@@ -1,0 +1,25 @@
+"""Production mesh definition for the multi-pod dry-run.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any JAX
+import and only then builds meshes.
+
+Single pod:  (16, 16)    -> ("data", "model")     = 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16) -> ("pod", "data", "model") = 512 chips, the 'pod'
+axis crossing DCN.  Batch shards over ('pod','data') by default; the
+pipeline hillclimb maps PP onto 'pod' instead (paper H5: PP across the slow
+domain, DP within).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,155 @@
+"""Input stand-ins (ShapeDtypeStruct) per (arch x shape) cell.
+
+No device allocation: everything is abstract shapes + shardings, the same
+pattern the dry-run uses to prove a configuration compiles and fits.
+
+Applicability rules (assignment):
+  * long_500k needs sub-quadratic attention -> run only for ssm/hybrid/SWA
+    archs; full-attention archs return a skip marker (noted in DESIGN.md).
+  * encoder-only archs would skip decode; all ten assigned archs have a
+    decoder, so decode shapes always apply here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig, ShapeConfig, get_shape
+from repro.serve import serve_step
+
+
+@dataclasses.dataclass
+class Cell:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    kind: str                       # train | prefill | decode
+    args: Tuple                     # ShapeDtypeStructs for the step fn
+    num_microbatches: int = 1
+    skip_reason: Optional[str] = None
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("long_500k requires sub-quadratic attention; "
+                f"{cfg.name} is full-attention (skip per assignment)")
+    return None
+
+
+def num_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                     mesh: Mesh) -> int:
+    if shape.kind != "train":
+        return 1
+    if shape.num_microbatches:
+        return shape.num_microbatches
+    dp = int(np.prod([mesh.shape[a] for a in shd.dp_axes(mesh)]))
+    # keep per-shard microbatch tokens ~<= 8k so remat'd activations of the
+    # widest archs stay inside 16 GB (see DESIGN.md §7)
+    per_shard = shape.global_batch // max(dp, 1)
+    target_seqs = max(1, 8192 // shape.seq_len)
+    nm = 1
+    while (per_shard // nm) > target_seqs and nm < 8:
+        nm *= 2
+    while shape.global_batch % (nm * dp) != 0 and nm > 1:
+        nm //= 2
+    return nm
+
+
+def _sds(shape, dtype, mesh: Mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def param_sds(cfg: ModelConfig, mesh: Mesh):
+    decls = model_lib.decls(cfg)
+    specs = shd.param_specs(decls, cfg.sharding, mesh)
+    return jax.tree_util.tree_map(
+        lambda d, s: _sds(d.shape, cfg.param_dtype, mesh, s),
+        decls, specs, is_leaf=lambda x: isinstance(x, shd.Decl))
+
+
+def opt_sds(cfg: ModelConfig, mesh: Mesh):
+    p = param_sds(cfg, mesh)
+    moments = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                       sharding=s.sharding), p)
+    return {"m": moments, "v": moments,
+            "step": _sds((), jnp.int32, mesh, P())}
+
+
+def batch_sds(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              nm: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    mb = shape.global_batch // nm
+    dp = shd.batch_spec(mesh, mb)[0]
+    s = shape.seq_len
+    n_text = s - cfg.n_patches if cfg.family == "vlm" else s
+    out = {
+        "tokens": _sds((nm, mb, n_text), jnp.int32, mesh, P(None, dp, None)),
+        "labels": _sds((nm, mb, s), jnp.int32, mesh, P(None, dp, None)),
+    }
+    if cfg.family == "encdec":
+        out["frames"] = _sds((nm, mb, cfg.n_frames, cfg.d_model),
+                             jnp.bfloat16, mesh, P(None, dp, None, None))
+    if cfg.family == "vlm":
+        out["patches"] = _sds((nm, mb, cfg.n_patches, cfg.d_model),
+                              jnp.bfloat16, mesh, P(None, dp, None, None))
+    return out
+
+
+def infer_batch_sds(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Prefill inputs: (B, S) without the microbatch dim."""
+    b = shape.global_batch
+    dp = shd.batch_spec(mesh, b)[0]
+    s = shape.seq_len
+    n_text = s - cfg.n_patches if cfg.family == "vlm" else s
+    out = {"tokens": _sds((b, n_text), jnp.int32, mesh, P(dp, None))}
+    if cfg.family == "encdec":
+        out["frames"] = _sds((b, cfg.n_frames, cfg.d_model), jnp.bfloat16,
+                             mesh, P(dp, None, None))
+    if cfg.family == "vlm":
+        out["patches"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.bfloat16,
+                              mesh, P(dp, None, None))
+    return out
+
+
+def cache_sds(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    decls = model_lib.cache_decls(cfg, shape.global_batch, shape.seq_len)
+    specs = serve_step.cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                   mesh)
+    def mk(d: shd.Decl, s: P):
+        dt = jnp.int32 if d.shape == () else jnp.bfloat16
+        if "ssm" in str(d.axes) and len(d.shape) == 5:
+            dt = jnp.float32               # ssm states kept fp32
+        return _sds(d.shape, dt, mesh, s)
+    return jax.tree_util.tree_map(
+        mk, decls, specs, is_leaf=lambda x: isinstance(x, shd.Decl))
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+               nm_override: int = 0) -> Cell:
+    shape = get_shape(shape_name)
+    if nm_override:
+        shape = dataclasses.replace(shape, num_microbatches=nm_override)
+    skip = applicable(cfg, shape)
+    if skip:
+        return Cell(cfg, shape, shape.kind, (), skip_reason=skip)
+    if shape.kind == "train":
+        nm = num_microbatches(cfg, shape, mesh)
+        args = (param_sds(cfg, mesh), opt_sds(cfg, mesh),
+                batch_sds(cfg, shape, mesh, nm))
+        return Cell(cfg, shape, "train", args, num_microbatches=nm)
+    if shape.kind == "prefill":
+        args = (param_sds(cfg, mesh), infer_batch_sds(cfg, shape, mesh))
+        return Cell(cfg, shape, "prefill", args)
+    # decode: one new token against a seq_len cache
+    b = shape.global_batch
+    dp = shd.batch_spec(mesh, b)[0]
+    tokens = _sds((b, 1), jnp.int32, mesh, P(dp, None))
+    args = (param_sds(cfg, mesh), cache_sds(cfg, shape, mesh), tokens)
+    return Cell(cfg, shape, "decode", args)

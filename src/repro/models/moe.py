@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+GShard/MaxText-style fixed-capacity routing, but dispatched with a sort +
+rank-within-expert scatter instead of the O(T*E*C) one-hot einsum, so both
+live memory and compiled FLOPs stay ~``top_k * capacity_factor`` of a dense
+FFN (dense-all-experts would inflate HLO FLOPs by E/top_k and poison the
+roofline's MODEL_FLOPS ratio).
+
+Expert placement on the mesh:
+  * E % model_axis == 0  (dbrx: 16e on 16)  -> expert parallelism: experts
+    sharded over 'model'; XLA inserts the dispatch all-to-all.
+  * otherwise             (mixtral: 8e on 16) -> tensor parallelism inside
+    each expert: d_ff sharded over 'model' (logical axis ``e_ff``).
+Both fall out of the logical->mesh rules in dist/sharding.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import Decl, constrain
+from repro.models.config import ModelConfig
+
+
+def moe_decls(cfg: ModelConfig, pre=(), pax=()) -> Dict[str, Decl]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+
+    def decl(shape, axes, **kw):
+        return Decl(pre + tuple(shape), pax + tuple(axes), **kw)
+
+    return {
+        "router": decl((d, e), ("embed", None), scale_dim=-2),
+        "we_gate": decl((e, d, f), ("experts", "embed", "e_ff"), scale_dim=-2),
+        "we_up": decl((e, d, f), ("experts", "embed", "e_ff"), scale_dim=-2),
+        "we_down": decl((e, f, d), ("experts", "e_ff", "embed"), scale_dim=-2),
+    }
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8
+
+
+def moe_ffn(cfg: ModelConfig, p, x: jax.Array,
+            mesh: Optional[Mesh] = None,
+            per_sequence: Optional[bool] = None) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    ``per_sequence=True`` (default) routes each sequence independently
+    (capacity per sequence): every sort/bincount/scatter is batched over B,
+    so under batch sharding the dispatch stays shard-local and the SPMD
+    partitioner never replicates token tensors.  §Perf measurement: the
+    global-sort variant made dbrx-132b prefill_32k take 223 GB/device
+    (involuntary full rematerialization); per-sequence dispatch is the
+    paper-era GShard-style equivalent with identical FLOPs up to capacity
+    rounding.  Set False for the single-pool (global) variant.
+    """
+    if per_sequence is None:
+        per_sequence = cfg.moe_dispatch == "per_seq"
+    if per_sequence and x.shape[0] > 1:
+        cap = capacity(x.shape[1], cfg)
+        # mesh flows into the vmapped body so the EP sharding constraint on
+        # the dispatch buffers survives (vmap prepends the batch dim to the
+        # constraint's PartitionSpec)
+        return jax.vmap(lambda xs: _moe_tokens(cfg, p, xs, cap,
+                                               mesh=mesh, vmapped=True))(x)
+    b, s, d = x.shape
+    y = _moe_tokens(cfg, p, x.reshape(b * s, d), capacity(b * s, cfg),
+                    mesh=mesh)
+    return y.reshape(b, s, d)
+
+
+def _moe_tokens(cfg: ModelConfig, p, xf: jax.Array, cap: int,
+                mesh: Optional[Mesh] = None,
+                vmapped: bool = False) -> jax.Array:
+    """Route a flat token block (T, D) -> (T, D)."""
+    t, d = xf.shape
+    k, e = cfg.top_k, cfg.n_experts
+
+    # --- routing (f32 for stable softmax) ---
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    top_logits, top_e = jax.lax.top_k(logits, k)            # (T, k)
+    gates = jax.nn.softmax(top_logits, axis=-1)             # renormalized top-k
+
+    # --- sort-based dispatch ---
+    flat_e = top_e.reshape(-1)                              # (T*k,)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    token_idx = order // k
+    counts = jnp.bincount(sorted_e, length=e)
+    offsets = jnp.cumsum(counts) - counts                   # exclusive
+    rank = jnp.arange(t * k) - offsets[sorted_e]
+    keep = rank < cap
+    slot = jnp.minimum(rank, cap - 1)
+    vals = xf[token_idx] * keep[:, None].astype(xf.dtype)
+    # scatter-add: dropped tokens contribute zeros, so clipped-slot
+    # collisions are harmless (unlike a scatter-set).
+    buf = jnp.zeros((e, cap, d), xf.dtype).at[sorted_e, slot].add(vals)
+    ep = mesh is not None and "model" in mesh.shape and \
+        e % mesh.shape["model"] == 0
+    # under vmap, with_sharding_constraint sees the unbatched aval and JAX
+    # prepends the batch dim itself — same spec either way
+    spec = P("model", None, None)
+    if ep:
+        buf = constrain(buf, spec)
+
+    # --- expert FFN (SwiGLU), stacked over experts ---
+    g = jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+    h = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["we_down"])
+    if ep:
+        h = constrain(h, spec)
+
+    # --- combine ---
+    out_vals = h[sorted_e, slot] * (keep.astype(jnp.float32)
+                                    * flat_g[order])[:, None].astype(xf.dtype)
+    return jnp.zeros((t, d), xf.dtype).at[token_idx].add(out_vals)
+
+
+def aux_load_balance_loss(logits: jax.Array, top_e: jax.Array,
+                          n_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (optional, train-time)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros(n_experts).at[top_e.reshape(-1)].add(1.0)
+    ce = ce / ce.sum()
+    return n_experts * jnp.sum(me * ce)

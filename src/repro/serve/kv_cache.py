@@ -1,0 +1,42 @@
+"""KV-cache utilities: growth/re-homing and ring-buffer semantics.
+
+Cache *layouts* are declared by each model family (``model.cache_decls``):
+stacked-over-layers (L, B, S, K, hd) tensors for attention archs, constant
+(L, B, H, P, N) states for SSM archs, ring buffers capped at the window for
+SWA archs.  This module hosts the layout-agnostic operations the server
+needs.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+
+def grow_cache(cache: Dict[str, jax.Array],
+               full: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Re-home a prefill-sized cache into a larger decode buffer.
+
+    Copies every tensor of ``cache`` into the leading slots of the
+    corresponding (bigger) tensor in ``full``; scalars (``len``) pass
+    through.  Ring caches (SWA) are size-preserving and pass through
+    unchanged."""
+    out = {}
+    for k, dst in full.items():
+        src = cache[k]
+        if k == "len" or src.ndim == 0:
+            out[k] = cache[k]
+            continue
+        if src.shape == dst.shape:
+            out[k] = src.astype(dst.dtype)
+            continue
+        sl = tuple(slice(0, d) for d in src.shape)
+        out[k] = dst.at[sl].set(src.astype(dst.dtype))
+    return out
+
+
+def cache_bytes(cache: Dict[str, jax.Array]) -> int:
+    """Total bytes held by a cache pytree (tests: SSM decode is O(1))."""
+    import numpy as np
+    return sum(np.asarray(jax.device_get(v)).nbytes
+               for v in jax.tree_util.tree_leaves(cache))

@@ -1,0 +1,142 @@
+"""Serving steps: jitted prefill + decode, and a batched request server.
+
+``prefill_step`` runs the full-sequence forward returning (last-token
+logits, cache); ``decode_step`` advances one token for the whole batch.
+Cache shardings come from the same logical-axis rules as parameters
+(``kv_heads -> model`` where divisible, else the long sequence dim — see
+dist/sharding.py and the dry-run notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.serve import kv_cache
+
+# logical rules for cache tensors: prefer kv-head sharding, fall back to
+# sequence (context-parallel decode), never both on 'model'.
+CACHE_RULES = {
+    "kv_heads": ("model",),
+    "kv_seq": ("model",),
+    "ssm_inner": ("model",),
+}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh):
+    decls = model_lib.cache_decls(cfg, batch, max_len)
+
+    def to_spec(d: shd.Decl):
+        # try kv_heads first; if it didn't shard, allow kv_seq
+        spec = shd.logical_to_spec(d.shape, d.axes,
+                                   {"kv_heads": ("model",),
+                                    "ssm_inner": ("model",)}, mesh)
+        if all(s is None for s in spec) and "kv_seq" in d.axes:
+            spec = shd.logical_to_spec(d.shape, d.axes,
+                                       {"kv_seq": ("model",)}, mesh)
+        # batch dim (index of None-axis dim 1) handled via dp below
+        return spec
+
+    specs = jax.tree_util.tree_map(to_spec, decls,
+                                   is_leaf=lambda x: isinstance(x, shd.Decl))
+    # shard batch dim (dim 1 for stacked caches) over dp axes when divisible
+    dp = shd.batch_spec(mesh, batch)[0]
+
+    def add_dp(d: shd.Decl, spec: P):
+        parts = list(spec)
+        for i, ax in enumerate(d.axes):
+            if ax is None and i == 1 and d.shape[i] == batch and dp is not None:
+                if parts[i] is None:
+                    parts[i] = dp
+        return P(*parts)
+
+    return jax.tree_util.tree_map(add_dp, decls, specs,
+                                  is_leaf=lambda x: isinstance(x, shd.Decl))
+
+
+def make_prefill(cfg: ModelConfig, mesh: Optional[Mesh] = None) -> Callable:
+    def prefill(params, batch):
+        logits, cache = model_lib.forward(cfg, params, batch, mesh=mesh,
+                                          return_cache=True)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_decode(cfg: ModelConfig, mesh: Optional[Mesh] = None) -> Callable:
+    def decode(params, cache, tokens):
+        logits, cache = model_lib.decode(cfg, params, cache, tokens,
+                                         mesh=mesh)
+        return logits[:, -1], cache
+    return decode
+
+
+# --- a small batched-requests server (greedy sampling) ---------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Static-batch server: pads a batch of requests, prefills once, then
+    decodes in lockstep until every request finishes (used by
+    examples/serve_batched.py and the serve smoke tests)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 batch_size: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._prefill = jax.jit(make_prefill(cfg))
+        self._decode = jax.jit(make_decode(cfg))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        for i in range(0, len(requests), self.batch_size):
+            self._run_batch(requests[i:i + self.batch_size])
+        return requests
+
+    def _run_batch(self, reqs: List[Request]):
+        b = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt     # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (b, self.cfg.n_frames, self.cfg.d_model), jnp.float32)
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (b, self.cfg.n_patches, self.cfg.d_model), jnp.float32)
+        logits, cache = self._prefill(self.params, batch)
+        # re-home the cache into a max_len buffer
+        full = model_lib.init_cache(self.cfg, b, self.max_len)
+        cache = kv_cache.grow_cache(cache, full)
+        steps = max(r.max_new_tokens for r in reqs)
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(steps):
+            for i, r in enumerate(reqs):
+                if not r.done:
+                    r.output.append(int(cur[i, 0]))
+                    if len(r.output) >= r.max_new_tokens:
+                        r.done = True
+            if all(r.done for r in reqs):
+                break
+            logits, cache = self._decode(self.params, cache, cur)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+
+

@@ -1,0 +1,134 @@
+"""Asynchronous, reshardable checkpointing (paper §4.4).
+
+Sailor uses async checkpointing (CheckFreq/PCcheck-style) to minimize
+rollback on reconfiguration.  Here:
+
+  * ``save`` snapshots the train state to host memory (``jax.device_get`` —
+    the only synchronous part), then a background thread serializes to disk;
+    training continues immediately.
+  * checkpoints are mesh-agnostic (plain host arrays + a manifest), so
+    ``restore`` can re-``device_put`` onto *any* new mesh/sharding — the
+    substrate for elastic reconfiguration with a different device count.
+  * atomicity: writes go to ``<dir>/tmp-<step>`` and are renamed into place;
+    a torn write can never be mistaken for a complete checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _unflatten(template: Any, flat: Dict[str, np.ndarray]) -> Any:
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(_path_str(p) for p in path)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # --- save ------------------------------------------------------------------
+    def save(self, step: int, state: Any, blocking: bool = False) -> None:
+        """Snapshot now, write in background (unless blocking)."""
+        self.wait()                      # at most one in-flight write
+        host = _flatten(jax.device_get(state))
+
+        def _write():
+            try:
+                tmp = os.path.join(self.dir, f"tmp-{step}")
+                final = os.path.join(self.dir, f"step-{step}")
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "state.npz"), **host)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump({"step": step, "keys": sorted(host)}, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            _write()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {err}") from err
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step-{s}"),
+                          ignore_errors=True)
+
+    # --- restore ----------------------------------------------------------------
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step-"):
+                out.append(int(name.split("-", 1)[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, int]:
+        """Load a checkpoint; optionally device_put onto new shardings
+        (kill-free elastic restore onto a different mesh)."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step-{step}", "state.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        state = _unflatten(template, flat)
+        if shardings is not None:
+            state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state, step

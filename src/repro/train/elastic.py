@@ -1,0 +1,201 @@
+"""Elastic training loop: controller + kill-free reconfiguration (§4.4).
+
+The paper's framework keeps workers alive across availability changes: they
+tear down communicators, repartition the model, and continue.  JAX's
+functional model makes the equivalent operation a *reshard*: live state
+arrays are ``device_put`` onto the new mesh's shardings and the step is
+re-jitted — no process restart, no rollback (rollback to the latest async
+checkpoint only happens when devices are *lost* with state on them, i.e. a
+failure rather than a planned change).
+
+The controller here is in-process and drives meshes built over subsets of
+``jax.devices()`` — on a real multi-host deployment the same logic runs in
+the coordinator with device sets arriving from the cluster manager; the
+decision logic (replan on change, kill-free vs. rollback) is identical.
+
+Straggler mitigation: per-step wall times feed an EWMA detector; a step
+slower than ``straggler_factor``x the running median flags the event to the
+controller, which (like Sailor) re-invokes the planner — here recorded and
+surfaced in metrics so tests/examples can assert on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimePlan:
+    """What the launcher needs from a planner decision for one jit program."""
+    n_devices: int
+    dp: int
+    tp: int
+    num_microbatches: int = 1
+
+    def mesh_shape(self) -> Tuple[int, int]:
+        assert self.dp * self.tp == self.n_devices, self
+        return (self.dp, self.tp)
+
+
+class StragglerDetector:
+    def __init__(self, factor: float = 3.0, window: int = 20):
+        self.factor = factor
+        self.times: List[float] = []
+        self.window = window
+        self.events: List[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        hist = self.times[-self.window:-1]
+        if len(hist) >= 5 and dt > self.factor * float(np.median(hist)):
+            self.events.append(step)
+            return True
+        return False
+
+
+class ElasticTrainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig,
+                 data_cfg: data_lib.DataConfig, workdir: str,
+                 checkpoint_every: int = 20,
+                 plan_fn: Optional[Callable[[int], RuntimePlan]] = None):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.data = data_lib.SyntheticDataset(cfg, data_cfg)
+        self.ckpt = ckpt_lib.CheckpointManager(workdir)
+        self.checkpoint_every = checkpoint_every
+        self.plan_fn = plan_fn or self._default_plan
+        self.detector = StragglerDetector()
+        self.log: List[Dict[str, Any]] = []
+        self.reconfigs: List[Dict[str, Any]] = []
+
+        self.mesh: Optional[Mesh] = None
+        self.plan: Optional[RuntimePlan] = None
+        self.step_fn = None
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+
+    # --- planning ------------------------------------------------------------
+    def _default_plan(self, n_devices: int) -> RuntimePlan:
+        """Greedy: all devices data-parallel (planner integration replaces
+        this in examples/elastic_reconfig.py)."""
+        return RuntimePlan(n_devices=n_devices, dp=n_devices, tp=1,
+                           num_microbatches=self.data_cfg.num_microbatches)
+
+    # --- (re)build -------------------------------------------------------------
+    def _shardings(self, mesh: Mesh):
+        pspec = shd.param_specs(model_lib.decls(self.cfg), self.cfg.sharding,
+                                mesh)
+        pshard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), pspec,
+            is_leaf=lambda x: isinstance(x, P))
+        oshard = {"m": pshard, "v": pshard,
+                  "step": NamedSharding(mesh, P())}
+        return pshard, oshard
+
+    def build(self, n_devices: int, init_key: Optional[jax.Array] = None):
+        """Initial build or kill-free rebuild onto ``n_devices`` devices."""
+        devices = jax.devices()[:n_devices]
+        plan = self.plan_fn(n_devices)
+        mesh = Mesh(
+            np.asarray(devices).reshape(plan.mesh_shape()), ("data", "model"))
+        pshard, oshard = self._shardings(mesh)
+        live = self.params is not None
+        with jax.set_mesh(mesh):
+            if not live:
+                key = init_key if init_key is not None else jax.random.PRNGKey(0)
+                self.params = jax.jit(
+                    lambda k: model_lib.init(self.cfg, k),
+                    out_shardings=pshard)(key)
+                self.opt_state = jax.jit(
+                    opt_lib.init_state, out_shardings=oshard)(self.params)
+            else:
+                # kill-free: reshard live state onto the new mesh
+                self.params = jax.device_put(self.params, pshard)
+                self.opt_state = jax.device_put(self.opt_state, oshard)
+        self.step_fn = ts_lib.jit_train_step(
+            self.cfg, self.opt_cfg, mesh, plan.num_microbatches,
+            self.data_cfg.micro_batch)
+        self.mesh, self.plan = mesh, plan
+
+    # --- failure path -------------------------------------------------------------
+    def restore_from_checkpoint(self, n_devices: int):
+        """Failure recovery: rebuild mesh, load latest checkpoint."""
+        self.params = None
+        self.opt_state = None
+        self.build(n_devices)
+        template = {
+            "params": jax.tree_util.tree_map(np.asarray,
+                                             jax.device_get(self.params)),
+            "opt": jax.tree_util.tree_map(np.asarray,
+                                          jax.device_get(self.opt_state)),
+        }
+        pshard, oshard = self._shardings(self.mesh)
+        try:
+            state, step = self.ckpt.restore(
+                template, shardings={"params": pshard, "opt": oshard})
+            self.params, self.opt_state = state["params"], state["opt"]
+            self.step = step
+        except FileNotFoundError:
+            self.step = 0          # cold start
+
+    # --- events ----------------------------------------------------------------------
+    def on_availability_change(self, n_devices: int, failure: bool = False):
+        t0 = time.perf_counter()
+        step_at_event = self.step
+        if failure:
+            self.restore_from_checkpoint(n_devices)
+            kind = "rollback"
+        else:
+            self.build(n_devices)
+            kind = "kill-free"
+        self.reconfigs.append({
+            "step": step_at_event, "resumed_at": self.step,
+            "n_devices": n_devices, "kind": kind,
+            "reconfig_s": time.perf_counter() - t0})
+
+    # --- training -------------------------------------------------------------------
+    def train(self, num_steps: int,
+              events: Sequence[Tuple[int, int, bool]] = ()) -> List[Dict]:
+        """Run ``num_steps``; ``events`` = (at_step, new_n_devices, failure)."""
+        ev = {s: (n, f) for s, n, f in events}
+        if self.mesh is None:
+            self.build(len(jax.devices()))
+        end = self.step + num_steps
+        while self.step < end:
+            if self.step in ev:
+                n, failure = ev.pop(self.step)
+                self.on_availability_change(n, failure)
+            batch = self.data.batch(self.step)
+            with jax.set_mesh(self.mesh):
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch)
+                metrics = jax.device_get(metrics)
+                dt = time.perf_counter() - t0
+            straggler = self.detector.observe(self.step, dt)
+            rec = {"step": self.step, "time_s": dt,
+                   "loss": float(metrics["loss"]),
+                   "n_devices": self.plan.n_devices,
+                   "straggler_flag": straggler}
+            self.log.append(rec)
+            self.step += 1
+            if self.step % self.checkpoint_every == 0:
+                self.ckpt.save(self.step, {
+                    "params": self.params, "opt": self.opt_state})
+        self.ckpt.wait()
+        return self.log

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see
+# the real single CPU device; multi-device tests spawn subprocesses.
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

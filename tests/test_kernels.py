@@ -1,0 +1,101 @@
+"""Pallas kernel sweeps vs. pure-jnp oracles (interpret mode on CPU).
+
+Per the assignment: sweep shapes/dtypes and assert_allclose against the
+ref.py oracle for every kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (1, 128, 2, 2, 64),
+    (2, 256, 4, 2, 64),
+    (1, 256, 3, 1, 80),        # MQA, odd head count, zamba head_dim
+    (2, 128, 8, 8, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, h, kh, d, causal, dtype):
+    q = jnp.asarray(RNG.standard_normal((b, s, h, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, s, kh, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, s, kh, d)), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    rep = h // kh
+    kr = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)
+    vr = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), kr, vr, causal=causal).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("blocks", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shapes(blocks):
+    bq, bk = blocks
+    q = jnp.asarray(RNG.standard_normal((2, 128, 2, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 128, 2, 64)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q.transpose(0, 2, 1, 3),
+                                   k.transpose(0, 2, 1, 3),
+                                   v.transpose(0, 2, 1, 3),
+                                   causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 128, 2, 32, 16, 32),
+    (2, 256, 3, 64, 64, 64),
+    (1, 256, 4, 64, 128, 128),   # mamba2-130m geometry
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_sweep(b, s, h, p, n, chunk, dtype):
+    x = jnp.asarray(RNG.standard_normal((b, s, h, p)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, s, h)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bb = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.5, dtype)
+    cc = jnp.asarray(RNG.standard_normal((b, s, n)) * 0.5, dtype)
+    y, st = ops.ssd_scan(x, dt, a, bb, cc, chunk=chunk)
+    yw, stw = ref.ssd_ref(x, dt, a, bb, cc)
+    tol = dict(rtol=4e-2, atol=4e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yw, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(stw),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 100, 512), (1, 7, 64), (16, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jnp.asarray(RNG.standard_normal(shape), dtype)
+    sc = jnp.asarray(RNG.standard_normal(shape[-1:]), dtype)
+    out = ops.rmsnorm(x, sc)
+    want = ref.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel path == model's chunked attention for a full-attention case."""
+    from repro.models import layers as L
+    q = jnp.asarray(RNG.standard_normal((2, 128, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 128, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 128, 2, 64)), jnp.float32)
+    a = L.attention(q, k, v, impl="chunked", causal=True)
+    b = L.attention(q, k, v, impl="pallas", causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)

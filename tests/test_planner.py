@@ -1,0 +1,188 @@
+"""Planner tests: DP correctness vs exhaustive, heuristics, constraints."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.cluster import heterogeneous_zone, multi_zone, single_zone
+from repro.core.planner import heuristics as H
+from repro.core.planner.dp_solver import DPSolver
+from repro.core.planner.objectives import (MAX_THROUGHPUT, MIN_COST,
+                                           Objective)
+from repro.core.planner.search import SailorPlanner, plan_for
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.simulator.simulate import simulate
+
+OPT = get_config("opt-350m")
+
+
+def _job(gbs=256, seq=2048):
+    return TrainJob(cfg=OPT, seq_len=seq, global_batch=gbs)
+
+
+# --- DP vs exhaustive -------------------------------------------------------------
+def _exhaustive_best(solver: DPSolver):
+    """Brute-force the same space the DP explores (small instances only):
+    every per-stage choice sequence, scored by est_time."""
+    all_stage_choices = []
+    for i in range(solver.pp):
+        all_stage_choices.append(None)
+
+    best = [None]
+
+    def rec(i, caps, region_lo, acc):
+        if i == solver.pp:
+            warmup = sum(a[2] for a in acc)
+            steady = max(a[2] for a in acc)
+            sync = max(a[3] for a in acc)
+            est = (warmup + max(solver.n_micro - 1, 0) * steady + sync)
+            if best[0] is None or est < best[0]:
+                best[0] = est
+            return
+        for ri, parts, t_i, tp_min, consume, rate in solver._combos(
+                i, caps, region_lo):
+            nt = len(solver.base_types)
+            new_caps = list(caps)
+            off = ri * nt
+            for k in range(nt):
+                new_caps[off + k] -= consume[k]
+            sync_i = solver._sync(i, tp_min)
+            p2p = 0.0 if i == solver.pp - 1 else 2 * solver._p2p_intra
+            rec(i + 1, tuple(new_caps), ri, acc + [(ri, parts, t_i + p2p,
+                                                    sync_i)])
+
+    rec(0, solver.caps0, 0, [])
+    return best[0]
+
+
+@pytest.mark.parametrize("pp,d,types", [
+    (2, 2, {"A100-40": 8, "V100-16": 8}),
+    (3, 1, {"A100-40": 8, "V100-16": 8}),
+    (2, 4, {"A100-40": 16}),
+])
+def test_dp_matches_exhaustive(pp, d, types):
+    cluster = heterogeneous_zone(types)
+    job = _job()
+    profile = JobProfile(job)
+    planner = SailorPlanner(job)
+    splits = H.balanced_split(profile, pp)
+    tp_sel = planner._tp_selection(pp, splits, 1, cluster.gpu_types())
+    regions, caps = H.region_pools(cluster)
+    solver = DPSolver(profile, cluster, splits, 1, d, tp_sel, regions, caps)
+    part = solver.best()
+    assert part is not None
+    want = _exhaustive_best(
+        DPSolver(profile, cluster, splits, 1, d, tp_sel, regions, caps))
+    got = part.est_time(solver.n_micro)
+    assert got <= want * 1.0001, (got, want)
+
+
+# --- heuristics ---------------------------------------------------------------------
+def test_h2_min_tp_is_minimal_and_cached():
+    job = _job()
+    profile = JobProfile(job)
+    table = H.TPTable(profile)
+    tp = table.min_tp(1, 0, 0, profile.n_partition_units, 8, "V100-16")
+    assert tp is not None
+    if tp > 1:
+        # one step below the minimum must not fit
+        from repro.core.simulator.memory import min_tp_for_stage
+        smaller = min_tp_for_stage(
+            profile, 1, 0, 0, profile.n_partition_units, 8, "V100-16",
+            (tp // 2,))
+        assert smaller is None
+
+
+def test_h2_min_tp_monotone_in_mbs():
+    job = _job()
+    profile = JobProfile(job)
+    table = H.TPTable(profile)
+    units = profile.n_partition_units
+    tps = [table.min_tp(1, 0, 0, units, m, "V100-16") for m in (1, 2, 4, 8)]
+    vals = [t if t is not None else 1e9 for t in tps]
+    assert vals == sorted(vals), tps
+
+
+def test_balanced_split_covers_all_layers():
+    profile = JobProfile(_job())
+    for pp in (1, 2, 3, 4, 6, 8, 13):
+        splits = H.balanced_split(profile, pp)
+        assert splits[0][0] == 0
+        assert splits[-1][1] == profile.n_partition_units
+        for (a, b), (c, d) in zip(splits, splits[1:]):
+            assert b == c and a < b
+        assert len(splits) == pp
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_dp_candidates_divide_batch(max_d, mbs):
+    for d in H.dp_candidates(256, mbs, max_d, True):
+        assert 256 % (d * mbs) == 0
+
+
+# --- end-to-end planner properties ---------------------------------------------------
+def test_planner_homog_beats_or_matches_subsets():
+    """More available chips can never reduce the best throughput."""
+    small = plan_for(OPT, single_zone("A100-40", 16),
+                     Objective(MAX_THROUGHPUT), 2048, 256)
+    big = plan_for(OPT, single_zone("A100-40", 64),
+                   Objective(MAX_THROUGHPUT), 2048, 256)
+    assert small.best is not None and big.best is not None
+    assert big.best.throughput >= small.best.throughput * 0.999
+
+
+def test_planner_respects_budget_constraint():
+    cluster = single_zone("A100-40", 64)
+    res = plan_for(OPT, cluster,
+                   Objective(MAX_THROUGHPUT, max_cost_per_iter=0.05),
+                   2048, 256)
+    if res.best is not None:
+        assert res.best.cost_per_iter <= 0.05 * 1.0001
+
+
+def test_planner_respects_throughput_constraint():
+    cluster = single_zone("A100-40", 64)
+    res = plan_for(OPT, cluster, Objective(MIN_COST, min_throughput=0.5),
+                   2048, 256)
+    assert res.best is not None
+    assert res.best.throughput >= 0.5 * 0.999
+
+
+def test_min_cost_not_more_expensive_than_max_throughput():
+    cluster = single_zone("A100-40", 32)
+    thr = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
+    cost = plan_for(OPT, cluster, Objective(MIN_COST), 2048, 256)
+    assert cost.best is not None and thr.best is not None
+    assert cost.best.cost_per_iter <= thr.best.cost_per_iter * 1.0001
+
+
+def test_planner_emits_valid_plans_only():
+    res = plan_for(OPT, heterogeneous_zone({"A100-40": 16, "V100-16": 16}),
+                   Objective(MAX_THROUGHPUT), 2048, 256)
+    assert res.best is not None
+    assert res.best.valid
+    # resource accounting: plan never exceeds availability
+    used = res.best.plan.chips_by_type()
+    assert used.get("A100-40", 0) <= 16
+    assert used.get("V100-16", 0) <= 16
+
+
+def test_planner_h5_dp_within_region():
+    cluster = multi_zone({
+        "z-a": ("region-1", {"A100-40": 16}),
+        "z-b": ("region-2", {"A100-40": 16}),
+    })
+    res = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
+    assert res.best is not None
+    for stage in res.best.plan.stages:
+        regions = {cluster.zone(r.zone).region for r in stage.replicas}
+        assert len(regions) == 1, "H5 violated: DP spans regions"
+
+
+def test_planner_deterministic():
+    cluster = heterogeneous_zone({"A100-40": 8, "V100-16": 8})
+    r1 = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
+    r2 = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
+    assert r1.best.plan == r2.best.plan

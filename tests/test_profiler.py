@@ -1,0 +1,57 @@
+"""Analytic profiler invariants + cpu-host calibration."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.profiler import measured
+from repro.core.profiler.hw_specs import ACCELERATORS
+
+
+def _prof(arch="opt-350m", seq=2048, gbs=256):
+    return JobProfile(TrainJob(cfg=get_config(arch), seq_len=seq,
+                               global_batch=gbs))
+
+
+def test_faster_gpu_means_faster_layer():
+    p = _prof()
+    a = p.cost("block", "A100-40", 1, 4)
+    v = p.cost("block", "V100-16", 1, 4)
+    assert a.fwd < v.fwd
+
+
+def test_bwd_roughly_double_fwd():
+    p = _prof()
+    c = p.cost("block", "A100-40", 1, 4)
+    assert 1.5 <= c.bwd / c.fwd <= 2.5
+
+
+def test_tp_reduces_time_with_overhead():
+    p = _prof("gpt-neo-2.7b")
+    t1 = p.cost("block", "A100-40", 1, 8).fwd
+    t2 = p.cost("block", "A100-40", 2, 8).fwd
+    assert t2 < t1            # TP=2 faster
+    assert t2 > t1 / 2        # but not perfectly (collectives)
+
+
+def test_moe_active_flops_only():
+    moe = _prof("mixtral-8x22b")
+    assert moe.cfg.active_params() < moe.cfg.total_params() / 2
+
+
+def test_stage_cost_additive():
+    p = _prof()
+    n = p.n_partition_units
+    f_all, b_all, _ = p.stage_cost(0, n, "A100-40", 1, 2)
+    f1, b1, _ = p.stage_cost(0, n // 2, "A100-40", 1, 2)
+    f2, b2, _ = p.stage_cost(n // 2, n, "A100-40", 1, 2)
+    assert abs((f1 + f2) - f_all) < 1e-9
+    assert abs((b1 + b2) - b_all) < 1e-9
+
+
+@pytest.mark.slow
+def test_cpu_host_calibration_runs():
+    cfg = get_config("smollm_360m").reduced()
+    spec = measured.calibrate_cpu_host(cfg, seq_len=32)
+    assert spec.peak_flops > 1e6       # something measurable
+    measured.register_calibrated(spec, "cpu-host-test")
+    assert "cpu-host-test" in ACCELERATORS

@@ -1,0 +1,57 @@
+"""Sharding rules: divisibility fallback, batch specs, cache specs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+def _fake_mesh(shape, axes):
+    # AbstractMesh-like: only .shape is used by the rules
+    class M:
+        pass
+    m = M()
+    m.shape = dict(zip(axes, shape))
+    return m
+
+
+def test_divisible_dims_shard():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    spec = shd.logical_to_spec((1024, 32, 128), ("embed", "heads", None),
+                               shd.policy_rules("fsdp_tp"), mesh)
+    assert spec == P("data", "model", None)
+
+
+def test_nondivisible_dims_replicate():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    # smollm: 15 heads on a 16-way model axis -> replicate
+    spec = shd.logical_to_spec((960, 15, 64), ("embed", "heads", None),
+                               shd.policy_rules("fsdp_tp"), mesh)
+    assert spec == P("data", None, None)
+    # granite MQA kv=1
+    spec = shd.logical_to_spec((6144, 1, 128), ("embed", "kv_heads", None),
+                               shd.policy_rules("tp"), mesh)
+    assert spec == P(None, None, None)
+
+
+def test_mesh_axis_used_once():
+    mesh = _fake_mesh((4,), ("model",))
+    spec = shd.logical_to_spec((64, 64), ("heads", "ff"),
+                               shd.policy_rules("tp"), mesh)
+    # both map to 'model'; only the first dim gets it
+    assert spec == P("model", None)
+
+
+def test_replicated_policy():
+    mesh = _fake_mesh((4, 4), ("data", "model"))
+    spec = shd.logical_to_spec((64, 64), ("embed", "ff"),
+                               shd.policy_rules("replicated"), mesh)
+    assert spec == P(None, None)
+
+
+def test_batch_spec_fallbacks():
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert shd.batch_spec(mesh, 256) == P(("pod", "data"))
+    assert shd.batch_spec(mesh, 16) == P("data")   # 16 % 32 != 0
+    assert shd.batch_spec(mesh, 1) == P(None)      # long_500k batch=1

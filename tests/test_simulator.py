@@ -1,0 +1,145 @@
+"""Simulator property tests (hypothesis) + invariants."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.cluster import multi_zone, single_zone
+from repro.core.planner.plan import (ParallelPlan, StageConfig, StageReplica,
+                                     homogeneous_plan)
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.simulator import memory as mem
+from repro.core.simulator import timing as tim
+from repro.core.simulator.simulate import simulate
+
+OPT = get_config("opt-350m")
+CLUSTER = single_zone("A100-40", 256)
+
+
+def _profile(gbs=256):
+    return JobProfile(TrainJob(cfg=OPT, seq_len=2048, global_batch=gbs))
+
+
+def _plan(pp=2, dp=2, tp=1, mbs=1, gbs=256, gpu="A100-40",
+          zone="us-central1-a"):
+    prof = _profile(gbs)
+    return homogeneous_plan(gpu, zone, pp, dp, tp,
+                            prof.n_partition_units, mbs, gbs), prof
+
+
+# --- memory ---------------------------------------------------------------------
+@given(mbs=st.sampled_from([1, 2, 4, 8]), tp=st.sampled_from([1, 2, 4]))
+@settings(max_examples=12, deadline=None)
+def test_memory_monotone_in_mbs_and_tp(mbs, tp):
+    plan, prof = _plan(pp=2, dp=2, tp=tp, mbs=mbs)
+    peak = mem.worker_peak_bytes(prof, plan, 0, tp)
+    plan2, _ = _plan(pp=2, dp=2, tp=tp, mbs=mbs * 2)
+    peak2 = mem.worker_peak_bytes(prof, plan2, 0, tp)
+    assert peak2 >= peak               # more microbatch -> more activation
+    peak_tp2 = mem.worker_peak_bytes(prof, plan, 0, tp * 2)
+    assert peak_tp2 <= peak            # more TP -> less per-worker memory
+
+
+def test_memory_first_stage_holds_most_activations():
+    """1F1B: earlier stages keep more in-flight microbatches."""
+    plan, prof = _plan(pp=4, dp=1)
+    peaks = [mem.worker_peak_bytes(prof, plan, i, 1) for i in range(4)]
+    # params differ per stage; compare activation-dominated ordering loosely:
+    assert peaks[0] >= peaks[-1] * 0.6
+
+
+def test_oom_detection_on_v100():
+    """GPT-Neo-2.7B (37GB training state) must NOT fit a 16GB V100 at
+    pp=1/tp=1 — while OPT-350M (~7GB) must."""
+    neo = get_config("gpt-neo-2.7b")
+    prof = JobProfile(TrainJob(cfg=neo, seq_len=2048, global_batch=256))
+    plan = homogeneous_plan("V100-16", "us-central1-a", 1, 1, 1,
+                            prof.n_partition_units, 8, 256)
+    assert not mem.plan_fits(prof, plan)
+    plan_small, prof_small = _plan(pp=1, dp=1, tp=1, mbs=8, gpu="V100-16")
+    assert mem.plan_fits(prof_small, plan_small)
+
+
+def test_memory_includes_optimizer_copies():
+    plan, prof = _plan(pp=1, dp=1, tp=1, mbs=1)
+    peak = mem.worker_peak_bytes(prof, plan, 0, 1)
+    params = prof.stage_params(0, prof.n_partition_units)
+    assert peak > params * mem.DEFAULT_MEM.mul_factor  # at least model state
+
+
+# --- timing ----------------------------------------------------------------------
+def test_more_microbatches_increase_iteration_time():
+    p1, prof = _plan(pp=2, dp=2, mbs=1)        # 128 micro
+    p2, _ = _plan(pp=2, dp=2, mbs=8)           # 16 micro
+    t1 = tim.iteration_time(prof, p1, CLUSTER).t_iter
+    t2 = tim.iteration_time(prof, p2, CLUSTER).t_iter
+    assert t1 > t2 * 0.8                       # alpha costs dominate at mbs=1
+
+
+def test_straggler_dominates_hetero_pipeline():
+    prof = _profile()
+    units = prof.n_partition_units
+    half = units // 2
+    fast = StageConfig(0, half, (StageReplica("A100-40", 1, "z"),))
+    slow = StageConfig(half, units, (StageReplica("V100-16", 1, "z"),))
+    plan = ParallelPlan((fast, slow), mbs=1, global_batch=256)
+    cluster = multi_zone({"z": ("r", {"A100-40": 8, "V100-16": 8})})
+    bd = tim.iteration_time(prof, plan, cluster)
+    assert bd.straggler_stage == 1             # V100 stage straggles
+
+
+def test_dp_sync_grows_with_replicas():
+    prof = _profile()
+    t2 = tim.sync_time(prof, _plan(pp=1, dp=2)[0], CLUSTER, 0)
+    t8 = tim.sync_time(prof, _plan(pp=1, dp=8)[0], CLUSTER, 0)
+    assert t8 > t2
+
+
+def test_inter_region_p2p_slower():
+    prof = _profile()
+    cluster = multi_zone({
+        "za": ("r1", {"A100-40": 8}),
+        "zb": ("r2", {"A100-40": 8}),
+    })
+    units = prof.n_partition_units
+    s0 = StageConfig(0, units // 2, (StageReplica("A100-40", 1, "za"),))
+    s1_same = StageConfig(units // 2, units,
+                          (StageReplica("A100-40", 1, "za"),))
+    s1_far = StageConfig(units // 2, units,
+                         (StageReplica("A100-40", 1, "zb"),))
+    near = ParallelPlan((s0, s1_same), 1, 256)
+    far = ParallelPlan((s0, s1_far), 1, 256)
+    assert tim.iteration_time(prof, far, cluster).t_iter > \
+        tim.iteration_time(prof, near, cluster).t_iter
+
+
+# --- cost -----------------------------------------------------------------------
+def test_cost_scales_with_resources():
+    prof = _profile()
+    r1 = simulate(prof, _plan(pp=1, dp=8, mbs=8)[0], CLUSTER)
+    r2 = simulate(prof, _plan(pp=1, dp=16, mbs=8)[0], CLUSTER)
+    # doubling DP doesn't halve time (all-reduce overhead) => cost/iter rises
+    assert r2.cost_per_iter > r1.cost_per_iter * 0.9
+
+
+def test_geo_comm_cost_positive_only_across_zones():
+    prof = _profile()
+    cluster = multi_zone({
+        "za": ("r1", {"A100-40": 8}),
+        "zb": ("r2", {"A100-40": 8}),
+    })
+    units = prof.n_partition_units
+    s0 = StageConfig(0, units // 2, (StageReplica("A100-40", 1, "za"),))
+    s1 = StageConfig(units // 2, units, (StageReplica("A100-40", 1, "zb"),))
+    r_geo = simulate(prof, ParallelPlan((s0, s1), 1, 256), cluster)
+    assert r_geo.cost_comm > 0
+    r_local = simulate(prof, _plan(pp=2, dp=1)[0], CLUSTER)
+    assert r_local.cost_comm == 0
+
+
+def test_simulate_reports_all_workers():
+    plan, prof = _plan(pp=2, dp=4, tp=2)
+    res = simulate(prof, plan, CLUSTER)
+    assert len(res.peak_mem) == 2
+    assert all(len(row) == 4 for row in res.peak_mem)

@@ -1,0 +1,57 @@
+"""End-to-end system behaviour: plan -> train -> checkpoint -> restore."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import heterogeneous_zone
+from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+from repro.core.planner.search import plan_for
+from repro.train import data as data_lib
+from repro.train import optimizer as opt_lib
+from repro.train.elastic import ElasticTrainer, RuntimePlan
+
+
+def test_plan_then_train_then_restore(tmp_path):
+    """The Sailor workflow end-to-end at CPU scale: the planner picks a
+    configuration for a simulated cluster; the elastic trainer executes a
+    reduced model; training resumes exactly from a checkpoint."""
+    cfg = get_config("smollm_360m").reduced()
+    cluster = heterogeneous_zone({"A100-40": 8, "V100-16": 8})
+    res = plan_for(get_config("smollm_360m"), cluster,
+                   Objective(MAX_THROUGHPUT), seq_len=2048, global_batch=256)
+    assert res.best is not None and res.best.valid
+    assert res.search_time_s < 120
+
+    data_cfg = data_lib.DataConfig(seq_len=16, global_batch=4)
+    opt_cfg = opt_lib.OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                      total_steps=30)
+    tr = ElasticTrainer(cfg, opt_cfg, data_cfg, workdir=str(tmp_path),
+                        checkpoint_every=5,
+                        plan_fn=lambda n: RuntimePlan(1, 1, 1, 1))
+    tr.build(1)
+    log = tr.train(11)
+    assert log[-1]["loss"] < log[0]["loss"]
+    tr.ckpt.wait()
+    loss_at_10 = [r for r in tr.log if r["step"] == 10][0]["loss"]
+
+    # fresh trainer restores from step 10 and reproduces step-10 batch loss
+    tr2 = ElasticTrainer(cfg, opt_cfg, data_cfg, workdir=str(tmp_path),
+                         checkpoint_every=100,
+                         plan_fn=lambda n: RuntimePlan(1, 1, 1, 1))
+    tr2.restore_from_checkpoint(1)
+    assert tr2.step == 10
+    log2 = tr2.train(1)
+    assert abs(log2[-1]["loss"] - loss_at_10) < 1e-4
+
+
+def test_straggler_detection():
+    from repro.train.elastic import StragglerDetector
+    det = StragglerDetector(factor=3.0)
+    for i in range(10):
+        det.observe(i, 0.1)
+    assert det.observe(10, 0.5)
+    assert det.events == [10]
+    assert not det.observe(11, 0.12)
