@@ -30,12 +30,11 @@ class SimResult:
     cost_comm: float
     peak_mem: List[List[Dict]]   # per stage, per replica
     timing: time_mod.TimingBreakdown
+    plan_seq_len: int = 0
 
     @property
     def tokens_per_s(self) -> float:
         return self.samples_per_s * self.plan_seq_len
-
-    plan_seq_len: int = 0
 
 
 def simulate(profile: JobProfile, plan: ParallelPlan,

@@ -1,0 +1,78 @@
+"""JAX version compatibility shims for the distributed layer.
+
+The repo targets the ``jax.set_mesh`` / ``jax.sharding.AxisType`` API
+surface; the pinned jaxlib in this container (0.4.x) predates both.  This
+module backports the minimal surface the codebase (and its tests) use:
+
+  * ``jax.set_mesh(mesh)``   -> context manager entering the mesh, so
+    ``with_sharding_constraint`` with bare ``PartitionSpec``s resolves
+    against it (0.4.x resource-env semantics).
+  * ``jax.sharding.AxisType`` -> enum stub (Auto/Explicit/Manual).  0.4.x
+    meshes have no axis types; Auto is the only behavior, which is exactly
+    what every call site requests.
+  * ``jax.make_mesh(..., axis_types=...)`` -> wrapper dropping the kwarg.
+
+Install is idempotent and a no-op on jax versions that already provide the
+API.  Importing ``repro.dist`` (directly or via any model/train/serve
+module) installs the shims; subprocess tests import this module first.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+
+def context_mesh() -> Optional[Mesh]:
+    """The mesh currently entered via ``set_mesh``/``with mesh:``, if any."""
+    if hasattr(jax.sharding, "get_mesh"):          # newer jax
+        m = jax.sharding.get_mesh()
+        return None if m is None or m.empty else m
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _shim_set_mesh(mesh: Mesh):
+    """``with jax.set_mesh(m):`` — 0.4.x equivalent of the new API.
+
+    A ``Mesh`` is itself a context manager that installs the resource env,
+    so returning it verbatim gives the with-statement the right semantics.
+    """
+    return mesh
+
+
+def install() -> None:
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _shim_set_mesh
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    try:
+        import inspect
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            _orig = jax.make_mesh
+
+            @functools.wraps(_orig)
+            def make_mesh(axis_shapes, axis_names, *args, **kwargs):
+                kwargs.pop("axis_types", None)
+                return _orig(axis_shapes, axis_names, *args, **kwargs)
+
+            jax.make_mesh = make_mesh
+    except (TypeError, ValueError):
+        pass
+
+
+install()

@@ -1,0 +1,360 @@
+"""MPMD pipeline runner with heterogeneous per-stage tensor parallelism.
+
+This is the execution-layer piece that distinguishes Sailor (§4.4) from
+same-TP-everywhere systems: each pipeline stage runs its *own* jitted
+program on its *own* disjoint device set, with its own (dp, tp) mesh —
+``even_stages(cfg, tps=[4, 2])`` gives stage 0 four-way TP and stage 1
+two-way TP, matching plans where early stages land on better-connected
+GPUs.  Activations and activation-gradients move between stage device
+sets with ``jax.device_put`` (ICI/host transfer), parameters never move.
+
+Schedule (DESIGN.md §5): microbatched 1F1B-style — at most ``n_stages``
+microbatches are in flight, each backward is issued as soon as its
+microbatch clears the last stage, so per-stage live activations are
+bounded like 1F1B (backward recomputes the stage forward, so only the
+stage *inputs* are retained).  The per-stage optimizer update runs where
+the parameters live.
+
+The pipeline numerically matches the single-program reference: scanning
+layers [0..k) then [k..n) equals scanning [0..n), and the loss/update
+math is shared with ``models/model.py`` and ``train/optimizer.py``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import mesh as mesh_lib
+from repro.dist import sharding as shd
+from repro.models import layers as L
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.model import masked_ce_sums
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One pipeline stage: layers [start, stop) at (dp, tp)."""
+    index: int
+    start: int
+    stop: int
+    tp: int
+    dp: int = 1
+    first: bool = False
+    last: bool = False
+
+    @property
+    def n_layers(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.tp
+
+
+def even_stages(cfg: ModelConfig, tps: Sequence[int],
+                dp: int = 1) -> List[Stage]:
+    """Split ``cfg.n_layers`` as evenly as possible over ``len(tps)`` stages.
+
+    Remainder layers go to the earliest stages (they also hold the larger
+    TP degrees in descending-tps plans).  Device-agnostic: meshes are built
+    by :class:`MPMDPipeline`, so this is callable from the planner.
+    """
+    n_stages = len(tps)
+    if not 1 <= n_stages <= cfg.n_layers:
+        raise ValueError(f"{n_stages} stages for {cfg.n_layers} layers")
+    base, rem = divmod(cfg.n_layers, n_stages)
+    stages, start = [], 0
+    for i, tp in enumerate(tps):
+        stop = start + base + (1 if i < rem else 0)
+        stages.append(Stage(index=i, start=start, stop=stop, tp=int(tp),
+                            dp=int(dp), first=(i == 0),
+                            last=(i == n_stages - 1)))
+        start = stop
+    return stages
+
+
+def stage_decls(cfg: ModelConfig, stage: Stage) -> Dict[str, Any]:
+    """Parameter declarations owned by one stage."""
+    sub = dataclasses.replace(cfg, n_layers=stage.n_layers)
+    d: Dict[str, Any] = {"layers": transformer.layer_decls(sub)}
+    if stage.first:
+        d["embed"] = shd.Decl((cfg.vocab_size, cfg.d_model),
+                              ("vocab", "embed"), init="embed")
+    if stage.last:
+        d["ln_f"] = shd.Decl((cfg.d_model,), ("embed",), init="ones")
+        d["lm_head"] = shd.Decl((cfg.d_model, cfg.vocab_size),
+                                ("embed", "vocab"), scale_dim=-2)
+    return d
+
+
+def _slice_full_params(full: Any, stage: Stage) -> Dict[str, Any]:
+    out: Dict[str, Any] = {
+        "layers": jax.tree_util.tree_map(
+            lambda a: a[stage.start:stage.stop], full["layers"])}
+    if stage.first:
+        out["embed"] = full["embed"]
+    if stage.last:
+        out["ln_f"] = full["ln_f"]
+        out["lm_head"] = full["lm_head"]
+    return out
+
+
+def _stage_apply(cfg: ModelConfig, stage: Stage, params, x):
+    """Stage forward: tokens (first) or hidden states -> hidden states."""
+    if stage.first:
+        x = params["embed"][x].astype(cfg.dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    impl = L.pick_attn_impl(cfg.attn_impl, s)
+
+    def body(h, lp):
+        h, _ = transformer.attn_block(cfg, lp, h, positions, impl, None)
+        h = transformer.ffn_block(cfg, lp, h, None)
+        return h, None
+
+    x, _ = jax.lax.scan(transformer._remat(body, cfg.remat), x,
+                        params["layers"])
+    if stage.last:
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x
+
+
+def _stage_loss(cfg: ModelConfig, stage: Stage, params, x, labels):
+    """Last-stage tail: layers + final norm + head + masked CE.
+
+    The CE is ``models/model.py::masked_ce_sums`` — the same program as
+    the single-model ``loss_fn``, so pipeline and reference losses agree
+    to float32 reduction order.
+    """
+    h = _stage_apply(cfg, stage, params, x)
+    logits = (h @ params["lm_head"].astype(cfg.dtype)).astype(jnp.float32)
+    nll_sum, n_tok, _ = masked_ce_sums(logits, labels)
+    return nll_sum / jnp.maximum(n_tok, 1)
+
+
+class MPMDPipeline:
+    """Multi-program multi-data pipeline over disjoint per-stage meshes.
+
+    Supports the scan-transformer families ('dense', 'moe') with untied
+    embeddings; stage 0 owns the embedding table, the last stage owns the
+    final norm + LM head.
+    """
+
+    def __init__(self, cfg: ModelConfig, stages: Sequence[Stage],
+                 opt_cfg: opt_lib.OptimizerConfig,
+                 devices: Optional[Sequence] = None,
+                 policy: str = "fsdp_tp"):
+        if cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"MPMD pipeline supports scan-transformer families, "
+                f"not {cfg.family!r}")
+        if cfg.tie_embeddings:
+            raise NotImplementedError(
+                "tied embeddings span first+last stage; untie for MPMD")
+        if stages[0].start != 0 or stages[-1].stop != cfg.n_layers:
+            raise ValueError(f"stages do not cover [0, {cfg.n_layers})")
+        for a, b in zip(stages, stages[1:]):
+            if a.stop != b.start:
+                raise ValueError(f"stages not contiguous: [{a.start},{a.stop})"
+                                 f" then [{b.start},{b.stop})")
+        if (not stages[0].first or not stages[-1].last
+                or any(s.first for s in stages[1:])
+                or any(s.last for s in stages[:-1])):
+            raise ValueError("stage first/last flags inconsistent with order")
+        self.cfg = cfg
+        self.stages = list(stages)
+        self.opt_cfg = opt_cfg
+        devices = list(jax.devices()) if devices is None else list(devices)
+        need = sum(st.n_devices for st in self.stages)
+        if need > len(devices):
+            raise ValueError(f"plan needs {need} devices, "
+                             f"have {len(devices)}")
+        self.meshes: List[Mesh] = []
+        off = 0
+        for st in self.stages:
+            self.meshes.append(mesh_lib.data_model_mesh(
+                st.dp, st.tp, devices[off:off + st.n_devices]))
+            off += st.n_devices
+        self._pshards = []
+        self._oshards = []
+        for st, mesh in zip(self.stages, self.meshes):
+            specs = shd.param_specs(stage_decls(cfg, st), policy, mesh)
+            ps = jax.tree_util.tree_map(
+                lambda s, m=mesh: NamedSharding(m, s), specs,
+                is_leaf=lambda x: isinstance(x, P))
+            self._pshards.append(ps)
+            self._oshards.append({"m": ps, "v": ps,
+                                  "step": NamedSharding(mesh, P())})
+        self.params: Optional[List[Any]] = None
+        self.opt_states: Optional[List[Any]] = None
+        self._programs = [self._build_programs(st) for st in self.stages]
+
+    # --- per-stage jitted programs ---------------------------------------------
+
+    def _build_programs(self, stage: Stage) -> Dict[str, Any]:
+        cfg, opt_cfg = self.cfg, self.opt_cfg
+        apply_ = functools.partial(_stage_apply, cfg, stage)
+        loss_ = functools.partial(_stage_loss, cfg, stage)
+
+        def fwd(p, x):
+            return apply_(p, x)
+
+        def bwd_last(p, x, labels):
+            if stage.first:    # single-stage pipeline: x is integer tokens
+                loss, gp = jax.value_and_grad(loss_)(p, x, labels)
+                return loss, gp, None
+            loss, (gp, gx) = jax.value_and_grad(loss_, argnums=(0, 1))(
+                p, x, labels)
+            return loss, gp, gx
+
+        def bwd_mid(p, x, gy):
+            _, vjp = jax.vjp(apply_, p, x)
+            gp, gx = vjp(gy)
+            return gp, gx
+
+        def bwd_first(p, x, gy):
+            # x is integer tokens: no input gradient to propagate
+            _, vjp = jax.vjp(lambda pp: apply_(pp, x), p)
+            (gp,) = vjp(gy)
+            return gp
+
+        def update(p, o, g):
+            return opt_lib.apply_updates(p, g, o, opt_cfg)
+
+        # old params/opt state are dead after the update: donate them so the
+        # optimizer step doesn't transiently double the stage's footprint
+        prog = {"fwd": jax.jit(fwd),
+                "update": jax.jit(update, donate_argnums=(0, 1))}
+        if stage.last:
+            prog["bwd"] = jax.jit(bwd_last)
+        elif stage.first:
+            prog["bwd"] = jax.jit(bwd_first)
+        else:
+            prog["bwd"] = jax.jit(bwd_mid)
+        return prog
+
+    # --- parameter loading -----------------------------------------------------
+
+    def full_params_like(self, full: Any) -> Any:
+        """Load a full single-program parameter tree into the pipeline.
+
+        Each stage receives its slice, placed on its mesh under the stage
+        sharding; optimizer state is initialized alongside.  Returns
+        ``full`` unchanged so callers can run a single-program reference
+        against the exact same weights.
+        """
+        self.params = []
+        self.opt_states = []
+        for st, mesh, ps, os_ in zip(self.stages, self.meshes,
+                                     self._pshards, self._oshards):
+            sliced = _slice_full_params(full, st)
+            p = jax.device_put(sliced, ps)
+            self.params.append(p)
+            self.opt_states.append(
+                jax.jit(opt_lib.init_state, out_shardings=os_)(p))
+        return full
+
+    def init_params(self, key: jax.Array) -> None:
+        """Initialize per-stage parameters in place (no full copy)."""
+        self.params = []
+        self.opt_states = []
+        keys = jax.random.split(key, len(self.stages))
+        for st, k, ps, os_ in zip(self.stages, keys, self._pshards,
+                                  self._oshards):
+            p = jax.jit(
+                lambda kk, st=st: shd.init_from_decls(
+                    stage_decls(self.cfg, st), kk, self.cfg.param_dtype),
+                out_shardings=ps)(k)
+            self.params.append(p)
+            self.opt_states.append(
+                jax.jit(opt_lib.init_state, out_shardings=os_)(p))
+
+    # --- transfers -------------------------------------------------------------
+
+    def _to_stage(self, idx: int, arr, *rest_axes):
+        mesh = self.meshes[idx]
+        spec = shd.batch_spec(mesh, arr.shape[0], *rest_axes)
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+
+    # --- the step --------------------------------------------------------------
+
+    def _forward_micro(self, tokens) -> Dict[str, Any]:
+        """Run one microbatch through every stage; keep per-stage inputs
+        (backward recomputes the stage forward from them)."""
+        inputs = []
+        x = self._to_stage(0, tokens, None)
+        for i, st in enumerate(self.stages):
+            if i > 0:
+                x = self._to_stage(i, x, None, None)
+            inputs.append(x)
+            x = self._programs[i]["fwd"](self.params[i], x)
+        return {"inputs": inputs}
+
+    def _backward_micro(self, ctx: Dict[str, Any], labels):
+        """Reverse sweep; returns (loss, per-stage grads)."""
+        n = len(self.stages)
+        grads: List[Any] = [None] * n
+        labels = self._to_stage(n - 1, labels, None)
+        loss, grads[n - 1], gx = self._programs[n - 1]["bwd"](
+            self.params[n - 1], ctx["inputs"][n - 1], labels)
+        for i in range(n - 2, 0, -1):
+            gx = self._to_stage(i, gx, None, None)
+            grads[i], gx = self._programs[i]["bwd"](
+                self.params[i], ctx["inputs"][i], gx)
+        if n > 1:
+            gx = self._to_stage(0, gx, None, None)
+            grads[0] = self._programs[0]["bwd"](
+                self.params[0], ctx["inputs"][0], gx)
+        return loss, grads
+
+    def train_step(self, batch: Dict[str, Any]) -> float:
+        """One optimizer step over a (num_micro, batch, seq) token batch.
+
+        Returns the mean over microbatches of the per-microbatch masked
+        mean loss, at the pre-update parameters — the same normalization
+        as the single-program ``train_step.loss_and_grads`` (and equal to
+        the flat-batch loss when valid-token counts are even across
+        microbatches, e.g. whenever no label is IGNORE_LABEL).
+        """
+        if self.params is None:
+            raise RuntimeError("load parameters first (full_params_like / "
+                               "init_params)")
+        tokens, labels = batch["tokens"], batch["labels"]
+        num_micro = tokens.shape[0]
+        n = len(self.stages)
+        acc: List[Any] = [None] * n
+        losses: List[Any] = []
+
+        # 1F1B-style: bound in-flight microbatches by the stage count; each
+        # backward drains the oldest pending forward.
+        pending: collections.deque = collections.deque()
+        next_mb = 0
+        while next_mb < num_micro or pending:
+            if next_mb < num_micro and len(pending) < n:
+                pending.append(
+                    (next_mb, self._forward_micro(tokens[next_mb])))
+                next_mb += 1
+            else:
+                mb, ctx = pending.popleft()
+                loss, grads = self._backward_micro(ctx, labels[mb])
+                losses.append(loss)      # device scalar; no sync here
+                for i in range(n):
+                    acc[i] = grads[i] if acc[i] is None else \
+                        jax.tree_util.tree_map(jnp.add, acc[i], grads[i])
+
+        inv = 1.0 / num_micro
+        for i in range(n):
+            g = jax.tree_util.tree_map(lambda a: a * inv, acc[i])
+            self.params[i], self.opt_states[i], _ = \
+                self._programs[i]["update"](self.params[i],
+                                            self.opt_states[i], g)
+        return float(np.sum(jax.device_get(losses)) * inv)

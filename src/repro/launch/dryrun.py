@@ -98,6 +98,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t_compile = time.perf_counter()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):     # older jax: list of dicts
+            cost = cost[0] if cost else {}
         txt = compiled.as_text()
         # trip-count-aware accounting (XLA's cost_analysis counts while
         # bodies once — useless for scan-over-layers programs; see hlo_cost)

@@ -138,15 +138,45 @@ def parse_computations(text: str) -> Tuple[Dict[str, Computation], str]:
     return comps, entry or ""
 
 
+def _operand_tokens(op: OpInfo) -> List[str]:
+    """Top-level comma split of the operand list after ``kind(``.
+
+    Operands may carry inline shapes (``dot(f32[64,64]{1,0} %x, ...)``)
+    whose brackets/braces/tuple parens contain commas of their own.
+    """
+    after = op.line.split(op.kind + "(", 1)
+    if len(after) < 2:
+        return []
+    tokens, cur, depth = [], [], 0
+    for ch in after[1]:
+        if ch == ")" and depth == 0:
+            break
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            tokens.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur and "".join(cur).strip():
+        tokens.append("".join(cur).strip())
+    return tokens
+
+
+def _token_shape(comp: Computation, token: str) -> Optional[str]:
+    """Shape of one operand token: inline if present, else by-name lookup."""
+    if "[" in token:
+        return token
+    return comp.op_shape(token.split()[-1] if token.split() else token)
+
+
 def _dot_flops(comp: Computation, op: OpInfo) -> float:
     out_dims = _dims(op.shape_str)
     cm = _CONTRACT.search(op.line)
-    # operands: first parenthesized list after the op kind
-    after = op.line.split(op.kind + "(", 1)
-    if len(after) < 2:
-        return 0.0
-    args = after[1].split(")", 1)[0].split(",")
-    lhs_shape = comp.op_shape(args[0]) if args else None
+    args = _operand_tokens(op)
+    lhs_shape = _token_shape(comp, args[0]) if args else None
     contract = 1
     if cm and lhs_shape is not None:
         ldims = _dims(lhs_shape)
@@ -160,12 +190,9 @@ def _dot_flops(comp: Computation, op: OpInfo) -> float:
 
 
 def _operand_shapes(comp: Computation, op: OpInfo) -> List[str]:
-    after = op.line.split(op.kind + "(", 1)
-    if len(after) < 2:
-        return []
     out = []
-    for a in after[1].split(")", 1)[0].split(",")[:8]:
-        s = comp.op_shape(a)
+    for a in _operand_tokens(op)[:8]:
+        s = _token_shape(comp, a)
         if s:
             out.append(s)
     return out

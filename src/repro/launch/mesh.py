@@ -10,16 +10,19 @@ Multi-pod:   (2, 16, 16) -> ("pod", "data", "model") = 512 chips, the 'pod'
 axis crossing DCN.  Batch shards over ('pod','data') by default; the
 pipeline hillclimb maps PP onto 'pod' instead (paper H5: PP across the slow
 domain, DP within).
+
+Mesh construction lives in ``repro.dist.mesh`` (shared with the elastic
+trainer and the MPMD pipeline); this module only pins the production
+shapes.
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.dist import mesh as dist_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    if multi_pod:
+        return dist_mesh.pod_data_model_mesh(2, 16, 16)
+    return dist_mesh.data_model_mesh(16, 16)

@@ -25,6 +25,22 @@ from repro.models.config import ModelConfig
 IGNORE_LABEL = -100
 
 
+def masked_ce_sums(logits: jax.Array, labels: jax.Array):
+    """Masked next-token CE as sums: (nll_sum, n_tokens, n_correct).
+
+    The single source of the loss math — shared by ``loss_fn``, the
+    chunked-loss scan body, and the MPMD pipeline's last-stage program,
+    so they stay numerically identical (fp32 log-softmax, IGNORE_LABEL
+    masking).  Sum form so callers can accumulate before normalizing.
+    """
+    mask = labels != IGNORE_LABEL
+    safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return (jnp.where(mask, nll, 0.0).sum(), mask.sum(),
+            jnp.where(mask, logits.argmax(-1) == labels, False).sum())
+
+
 def get_module(cfg: ModelConfig) -> ModuleType:
     return {
         "dense": transformer,
@@ -87,17 +103,10 @@ def loss_fn(cfg: ModelConfig, params, batch, *,
     if cfg.logits_chunk and cfg.family in ("dense", "moe", "vlm"):
         return _chunked_loss(cfg, params, batch, mesh=mesh)
     logits = forward(cfg, params, batch, mesh=mesh)
-    labels = batch["labels"]
-    mask = (labels != IGNORE_LABEL)
-    safe = jnp.where(mask, labels, 0)
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
-    denom = jnp.maximum(mask.sum(), 1)
-    loss = jnp.where(mask, nll, 0.0).sum() / denom
-    metrics = {"loss": loss,
-               "tokens": mask.sum(),
-               "accuracy": (jnp.where(
-                   mask, (logits.argmax(-1) == labels), False).sum() / denom)}
+    nll_sum, n_tok, n_corr = masked_ce_sums(logits, batch["labels"])
+    denom = jnp.maximum(n_tok, 1)
+    loss = nll_sum / denom
+    metrics = {"loss": loss, "tokens": n_tok, "accuracy": n_corr / denom}
     return loss, metrics
 
 
@@ -121,14 +130,8 @@ def _chunked_loss(cfg: ModelConfig, params, batch, *,
         nll_sum, n_tok, n_correct = carry
         xi, li = xs
         logits = (xi @ head.astype(xi.dtype)).astype(jnp.float32)
-        mask = li != IGNORE_LABEL
-        safe = jnp.where(mask, li, 0)
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
-        nll_sum += jnp.where(mask, nll, 0.0).sum()
-        n_tok += mask.sum()
-        n_correct += jnp.where(mask, logits.argmax(-1) == li, False).sum()
-        return (nll_sum, n_tok, n_correct), None
+        s_nll, s_tok, s_corr = masked_ce_sums(logits, li)
+        return (nll_sum + s_nll, n_tok + s_tok, n_correct + s_corr), None
 
     (nll_sum, n_tok, n_corr), _ = jax.lax.scan(
         body, (jnp.float32(0.0), jnp.int32(0), jnp.int32(0)), (xc, lc))

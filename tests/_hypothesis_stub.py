@@ -1,0 +1,74 @@
+"""Minimal deterministic stand-in for the `hypothesis` package.
+
+The pinned container does not ship `hypothesis` (and the repo cannot add
+dependencies), but the property tests only use a tiny surface:
+``given``, ``settings(max_examples=, deadline=)``, ``strategies.integers``
+and ``strategies.sampled_from``.  This module materializes each strategy
+into a deterministic value set (bounds + seeded interior points) and runs
+the test body over up to ``max_examples`` combinations — a fixed sweep
+rather than randomized search, which also keeps CI stable.
+
+``tests/conftest.py`` installs this under the ``hypothesis`` name ONLY
+when the real package is absent, so environments that have hypothesis
+(and its auto-loaded pytest plugin) use the real thing untouched.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, values):
+        self.values = list(values)
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    pts = {lo, hi, lo + (hi - lo) // 2}
+    if hi > lo:
+        pts.update({lo + 1, hi - 1})
+    rng = random.Random(10_007 * lo + hi)
+    pts.update(rng.randint(lo, hi) for _ in range(6))
+    return _Strategy(sorted(pts))
+
+
+def _sampled_from(seq) -> _Strategy:
+    return _Strategy(seq)
+
+
+strategies = types.SimpleNamespace(integers=_integers,
+                                   sampled_from=_sampled_from)
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
+    def deco(fn):
+        names = list(kw_strats)
+        pools = [s.values for s in arg_strats] + \
+                [kw_strats[n].values for n in names]
+
+        @functools.wraps(fn)
+        def wrapper():
+            combos = list(itertools.product(*pools))
+            cap = getattr(fn, "_hyp_max_examples", 100)
+            if len(combos) > cap:
+                random.Random(0).shuffle(combos)
+                combos = combos[:cap]
+            for combo in combos:
+                fn(*combo[:len(arg_strats)],
+                   **dict(zip(names, combo[len(arg_strats):])))
+
+        # hide the strategy-filled params from pytest's fixture resolution
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

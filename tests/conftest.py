@@ -6,3 +6,10 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # container without hypothesis: alias the deterministic stand-in
+    import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub

@@ -1,0 +1,120 @@
+"""Fast CPU-only unit tests for the repro.dist layer.
+
+The tests in test_distributed.py are 8-device subprocess integration
+tests (marked slow); these cover the pure-logic pieces in-process:
+stage splitting, dp-axis discovery, declaration initialization.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist import sharding as shd
+from repro.dist.pipeline import even_stages
+from repro.models import model as model_lib
+
+
+def _cfg(n_layers):
+    return dataclasses.replace(get_config("smollm_360m").reduced(),
+                               n_layers=n_layers, tie_embeddings=False)
+
+
+# --- even_stages ---------------------------------------------------------------
+
+def test_even_stages_even_split():
+    st = even_stages(_cfg(4), tps=[4, 2], dp=1)
+    assert [(s.start, s.stop) for s in st] == [(0, 2), (2, 4)]
+    assert [s.tp for s in st] == [4, 2]
+    assert st[0].first and not st[0].last
+    assert st[1].last and not st[1].first
+
+
+def test_even_stages_uneven_layers_front_loaded():
+    st = even_stages(_cfg(7), tps=[2, 2, 1])
+    assert [(s.start, s.stop) for s in st] == [(0, 3), (3, 5), (5, 7)]
+    assert sum(s.n_layers for s in st) == 7
+
+
+def test_even_stages_dp_and_device_counts():
+    st = even_stages(_cfg(4), tps=[4, 2], dp=2)
+    assert [s.n_devices for s in st] == [8, 4]
+    assert all(s.dp == 2 for s in st)
+
+
+def test_even_stages_single_stage_covers_all():
+    (s,) = even_stages(_cfg(5), tps=[8])
+    assert (s.start, s.stop) == (0, 5)
+    assert s.first and s.last
+
+
+def test_even_stages_rejects_more_stages_than_layers():
+    with pytest.raises(ValueError):
+        even_stages(_cfg(2), tps=[1, 1, 1])
+
+
+# --- dp_axes / batch_spec -------------------------------------------------------
+
+def _fake_mesh(shape, axes):
+    class M:
+        pass
+    m = M()
+    m.shape = dict(zip(axes, shape))
+    return m
+
+
+def test_dp_axes_2d_and_3d():
+    assert shd.dp_axes(_fake_mesh((4, 2), ("data", "model"))) == ("data",)
+    assert shd.dp_axes(_fake_mesh((2, 4, 2), ("pod", "data", "model"))) \
+        == ("pod", "data")
+    assert shd.dp_axes(_fake_mesh((8,), ("model",))) == ()
+
+
+def test_batch_spec_trailing_axes_pass_through():
+    mesh = _fake_mesh((4, 2), ("data", "model"))
+    assert shd.batch_spec(mesh, 8, None, "model", None) \
+        == P("data", None, "model", None)
+    # batch not divisible by any dp group -> replicated batch dim
+    assert shd.batch_spec(mesh, 3, None) == P(None, None)
+
+
+# --- init_from_decls ------------------------------------------------------------
+
+def test_init_from_decls_shape_dtype_roundtrip():
+    cfg = get_config("qwen1_5_0_5b").reduced()
+    decls = model_lib.decls(cfg)
+    params = shd.init_from_decls(decls, jax.random.PRNGKey(0), "bfloat16")
+    flat_d = jax.tree_util.tree_leaves(
+        decls, is_leaf=lambda x: isinstance(x, shd.Decl))
+    flat_p = jax.tree_util.tree_leaves(params)
+    assert len(flat_d) == len(flat_p)
+    for d, p in zip(flat_d, flat_p):
+        assert p.shape == d.shape, (d, p.shape)
+        assert p.dtype == jnp.bfloat16
+
+    f32 = shd.init_from_decls(decls, jax.random.PRNGKey(0), "float32")
+    for p in jax.tree_util.tree_leaves(f32):
+        assert p.dtype == jnp.float32
+        assert bool(jnp.isfinite(p).all())
+
+
+def test_init_kinds():
+    key = jax.random.PRNGKey(1)
+    ones = shd.init_from_decls(
+        shd.Decl((4,), ("embed",), init="ones"), key, "float32")
+    np.testing.assert_array_equal(np.asarray(ones), np.ones(4, np.float32))
+    # scaled: std ~ shape[scale_dim]**-0.5
+    w = shd.init_from_decls(
+        shd.Decl((4096, 64), ("embed", None), scale_dim=0), key, "float32")
+    assert 0.5 < float(jnp.std(w)) * np.sqrt(4096) < 2.0
+    a_log = shd.init_from_decls(
+        shd.Decl((64,), (None,), init="a_log"), key, "float32")
+    a = np.exp(np.asarray(a_log))
+    assert a.min() >= 1.0 and a.max() < 16.0
+    dt_bias = shd.init_from_decls(
+        shd.Decl((64,), (None,), init="dt_bias"), key, "float32")
+    dt = np.log1p(np.exp(np.asarray(dt_bias)))    # softplus
+    assert dt.min() >= 1e-3 - 1e-6 and dt.max() <= 0.1 + 1e-6

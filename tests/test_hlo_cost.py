@@ -84,7 +84,7 @@ def test_collective_weighted_by_trips():
     from helpers import run_py
     out = run_py("""
         import jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
         from repro.launch.hlo_cost import analyze
         mesh = jax.make_mesh((4,), ("model",),
                              axis_types=(AxisType.Auto,))
@@ -96,7 +96,8 @@ def test_collective_weighted_by_trips():
             return c
         with jax.set_mesh(mesh):
             comp = jax.jit(
-                f, in_shardings=(P(None, "model"), P("model", None)),
+                f, in_shardings=(NamedSharding(mesh, P(None, "model")),
+                                 NamedSharding(mesh, P("model", None))),
             ).lower(jax.ShapeDtypeStruct((8, 64), jnp.float32),
                     jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
         s = analyze(comp.as_text())
