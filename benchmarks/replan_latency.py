@@ -1,0 +1,79 @@
+"""Replan latency: cold full search vs warm-start incremental replan.
+
+The control plane re-invokes the planner on every availability change
+(paper §4.4), so replan latency bounds how fast the job can chase
+capacity.  This benchmark replays seeded single-zone capacity deltas
+against a 3-zone / 2-region A100 fleet and compares:
+
+  * cold   — a fresh ``plan_for`` (new planner, empty caches), what a
+             from-scratch cluster manager would pay per event;
+  * warm   — ``IncrementalReplanner.replan`` primed on the base cluster
+             (incumbent seeding + candidate reuse + warm cost tables);
+  * hit    — replanning an already-seen fingerprint (Fig. 2's random walk
+             revisits states constantly).
+
+Emits per-delta rows plus the aggregate speedup (warm must be >= 2x cold).
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cluster import multi_zone
+from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+from repro.core.planner.search import plan_for
+from repro.core.profiler.analytic import TrainJob
+from repro.manager import IncrementalReplanner
+
+from benchmarks.common import emit, timed
+
+ZONES = ["us-central1-a", "us-central1-b", "us-west1-a"]
+
+
+def run():
+    model = get_config("opt-350m")
+    seq, gbs = 2048, 2048
+    job = TrainJob(cfg=model, seq_len=seq, global_batch=gbs)
+    obj = Objective(MAX_THROUGHPUT)
+    cluster = multi_zone({
+        "us-central1-a": ("us-central1", {"A100-40": 64}),
+        "us-central1-b": ("us-central1", {"A100-40": 64}),
+        "us-west1-a":    ("us-west1",    {"A100-40": 64}),
+    })
+
+    rng = np.random.default_rng(0)
+    deltas = []
+    for i in range(5):
+        zone = ZONES[int(rng.integers(0, len(ZONES)))]
+        drop = int(rng.integers(8, 33))
+        deltas.append((zone, drop,
+                       cluster.with_capacity({(zone, "A100-40"):
+                                              64 - drop})))
+
+    replanner = IncrementalReplanner(job, obj)
+    base = replanner.replan(cluster)
+    emit("replan/prime_cold", base.search_time_s * 1e6,
+         f"t_iter={base.best.t_iter:.3f}s")
+
+    cold_tot = warm_tot = 0.0
+    for i, (zone, drop, c) in enumerate(deltas):
+        res_cold, _ = timed(plan_for, model, c, obj, seq, gbs)
+        replanner.replan(cluster)            # re-prime (exact hit)
+        res_warm = replanner.replan(c)
+        cold_tot += res_cold.search_time_s
+        warm_tot += res_warm.search_time_s
+        ratio = res_warm.best.t_iter / res_cold.best.t_iter
+        emit(f"replan/delta{i}_{zone}_-{drop}_cold",
+             res_cold.search_time_s * 1e6, f"t_iter={res_cold.best.t_iter:.3f}s")
+        emit(f"replan/delta{i}_{zone}_-{drop}_warm",
+             res_warm.search_time_s * 1e6,
+             f"certified={res_warm.stats['certified']} "
+             f"restricted={res_warm.stats.get('restricted', False)} "
+             f"incumbent={res_warm.stats['incumbent']} "
+             f"quality={ratio:.3f}x")
+
+    hit = replanner.replan(deltas[0][2])
+    emit("replan/exact_hit", hit.search_time_s * 1e6,
+         f"cache={hit.stats['cache']}")
+    speedup = cold_tot / max(warm_tot, 1e-12)
+    emit("replan/speedup_warm_vs_cold", 0.0, f"{speedup:.2f}x")
+    assert speedup >= 2.0, \
+        f"warm-start replan only {speedup:.2f}x faster than cold search"

@@ -1,31 +1,39 @@
-"""Elasticity demo (paper §4.4): availability changes -> replan -> kill-free
-reconfigure, with failure rollback from an async checkpoint.
+"""Elasticity demo (paper §4.4): the autonomous control plane.
 
 Replays a Figure-2-style availability trace against a live training job on
-CPU host devices.  On every change point the controller re-invokes the
-planner (fast enough to run on each event — the paper's core speed claim)
-and the runtime reshapes the mesh without restarting:
+CPU host devices — but unlike the early version of this demo, nothing is
+hand-translated: ``repro.manager`` watches the trace, re-invokes the
+planner on every change point (warm-started, so replans are much cheaper
+than the first search), prices each transition, and drives the trainer:
 
-  * capacity drop (nodes preempted, state intact)  -> kill-free reshard
-  * node failure (state lost)                      -> rollback to the
-    latest async checkpoint
+  * capacity drop, state intact   -> kill-free reshard
+  * bulk preemption (state lost)  -> rollback to the latest async checkpoint
+  * short capacity blip           -> deferred (hysteresis absorbs it)
+  * straggler step                -> replan, recorded in the decision log
 
 Run:  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/elastic_reconfig.py
 """
 import os
+import shutil
 
 if "xla_force_host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
-import jax  # noqa: E402
+import jax  # noqa: E402,F401
 
 from repro.configs import get_config  # noqa: E402
 from repro.core.cluster import AvailabilityTrace, single_zone  # noqa: E402
+from repro.core.planner.objectives import (MAX_THROUGHPUT,  # noqa: E402
+                                           Objective)
+from repro.core.profiler.analytic import TrainJob  # noqa: E402
+from repro.manager import (AvailabilityMonitor, Controller,  # noqa: E402
+                           ControllerConfig, IncrementalReplanner, TraceFeed,
+                           TransitionConfig, TransitionModel)
 from repro.train import data as data_lib  # noqa: E402
 from repro.train import optimizer as opt_lib  # noqa: E402
-from repro.train.elastic import ElasticTrainer, RuntimePlan  # noqa: E402
+from repro.train.elastic import ElasticTrainer  # noqa: E402
 
 
 def main() -> None:
@@ -35,35 +43,33 @@ def main() -> None:
                                       total_steps=80)
 
     # a seeded availability trace over an 8-device "zone"
-    trace = AvailabilityTrace(single_zone("cpu-host", 8), seed=4,
-                              step_s=60, horizon_s=1800, preempt_prob=0.25)
-    # translate trace change points into training-step events
-    events = []
-    seen = 8
-    for i, (t, cl) in enumerate(trace.change_points()):
-        n = max(1, min(8, cl.total_chips("cpu-host")))
-        # power-of-two device counts for clean meshes
-        while n & (n - 1):
-            n -= 1
-        if n != seen and len(events) < 4:
-            step = 10 + 12 * len(events)
-            failure = n < seen        # capacity drops = preemption/failure
-            events.append((step, n, failure))
-            seen = n
-    print("availability events (step, devices, failure):", events)
+    cluster0 = single_zone("cpu-host", 8)
+    trace = AvailabilityTrace(cluster0, seed=4, step_s=60, horizon_s=3600,
+                              preempt_prob=0.25)
 
-    trainer = ElasticTrainer(cfg, opt_cfg, data_cfg,
-                             workdir="artifacts/elastic_demo",
-                             checkpoint_every=8)
-    trainer.build(8)
-    log = trainer.train(60, events=events)
-    print(f"\ntrained {len(log)} steps; loss {log[0]['loss']:.3f} -> "
-          f"{log[-1]['loss']:.3f}")
+    job = TrainJob(cfg=cfg, seq_len=data_cfg.seq_len,
+                   global_batch=data_cfg.global_batch)
+    workdir = "artifacts/elastic_demo"
+    shutil.rmtree(workdir, ignore_errors=True)   # stale checkpoints confuse
+    trainer = ElasticTrainer(cfg, opt_cfg, data_cfg,  # the rollback story
+                             workdir=workdir, checkpoint_every=8)
+    ctl = Controller(
+        trainer,
+        AvailabilityMonitor(cluster0, [TraceFeed(trace)]),
+        IncrementalReplanner(job, Objective(MAX_THROUGHPUT)),
+        transition=TransitionModel(TransitionConfig(hysteresis_s=120.0)),
+        config=ControllerConfig(step_time_s=60.0, max_devices=8))
+
+    log = ctl.run(60)
+    print(f"trained {len(log)} steps; loss {log[0]['loss']:.3f} -> "
+          f"{log[-1]['loss']:.3f}\n")
+    print(ctl.summary())
+    print("\nreconfigurations applied:")
     for r in trainer.reconfigs:
         print(f"  step {r['step']:3d}: {r['kind']:9s} -> "
               f"{r['n_devices']} devices in {r['reconfig_s']*1e3:.0f} ms")
     if trainer.detector.events:
-        print("  straggler flags at steps:", trainer.detector.events)
+        print("straggler flags at steps:", trainer.detector.events)
 
 
 if __name__ == "__main__":

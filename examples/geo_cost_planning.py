@@ -55,3 +55,44 @@ for cap in (0.10, 0.25, 0.50, 1.00):
               f"(${r.best.cost_per_iter:.3f}/iter)")
     else:
         print(f"  cap ${cap:.2f}: infeasible")
+
+# --- dynamic geo scenario: spot prices + preemption drive replans ------------
+# The control plane's monitor diffs a scripted feed of cluster snapshots
+# (recorded spot-market history would slot in identically) into typed
+# events; every PriceChange triggers a *min-cost* replan through the
+# warm-start cache, so chasing spot discounts across regions costs
+# milliseconds, not a fresh search.
+print("\n=== spot market: PriceChange events -> min-cost replans ===")
+from repro.manager import (AvailabilityMonitor, IncrementalReplanner,  # noqa: E402
+                           ListFeed, NodeFailure, PriceChange)
+
+job = TrainJob(cfg=model, seq_len=SEQ, global_batch=GBS)
+# floor low enough that the 32-chip us-west1 pool is eligible — the
+# cost/throughput trade is then real: chase the discount or hold speed.
+floor = Objective(MIN_COST, min_throughput=res.best.throughput * 0.2)
+replanner = IncrementalReplanner(job, floor)
+base = replanner.replan(cluster)
+print(f"baseline: ${base.best.cost_per_iter:.3f}/iter on "
+      f"{base.best.plan.n_chips} chips "
+      f"({base.search_time_s*1e3:.0f}ms {base.stats['cache']})")
+
+west_discount = cluster.with_price({("us-west1-a", "A100-40"): 1.20})
+west_preempted = west_discount.with_capacity({("us-west1-a", "A100-40"): 16})
+feed = ListFeed([
+    (600.0, west_discount),      # spot discount appears in us-west1
+    (1200.0, west_preempted),    # half the discounted pool is preempted
+    (1800.0, cluster),           # price reverts, capacity restored
+])
+monitor = AvailabilityMonitor(cluster, [feed])
+for ev in monitor.drain():
+    if not isinstance(ev, (PriceChange, NodeFailure)):
+        continue
+    r = replanner.replan(ev.cluster)
+    by_zone = {}
+    for s in r.best.plan.stages:
+        for rep in s.replicas:
+            by_zone[rep.zone] = by_zone.get(rep.zone, 0) + rep.tp
+    print(f"  {ev.describe()}\n    -> ${r.best.cost_per_iter:.3f}/iter, "
+          f"chips {by_zone} ({r.search_time_s*1e3:.0f}ms "
+          f"{r.stats['cache']})")
+print(f"replanner: {replanner.stats}")

@@ -51,6 +51,7 @@ def main() -> None:
     tr.build(1)
     t0 = time.time()
     log = tr.train(args.steps)
+    tr.ckpt.wait()               # join the last async save before resuming
     dt = time.time() - t0
     toks = args.steps * args.global_batch * args.seq_len
     print(f"{args.steps} steps in {dt/60:.1f} min ({toks/dt:.0f} tok/s)")

@@ -109,6 +109,62 @@ class ClusterSpec:
             new_zones.append(dataclasses.replace(z, capacity=cap))
         return dataclasses.replace(self, zones=tuple(new_zones))
 
+    def with_price(self, prices: Mapping[Tuple[str, str], float]) -> "ClusterSpec":
+        """New ClusterSpec with price_override[(zone, type)] applied."""
+        new_zones = []
+        for z in self.zones:
+            ovr = dict(z.price_override)
+            for (zn, t), p in prices.items():
+                if zn == z.name:
+                    ovr[t] = p
+            new_zones.append(dataclasses.replace(z, price_override=ovr))
+        return dataclasses.replace(self, zones=tuple(new_zones))
+
+    # ---- control-plane helpers (repro.manager) -------------------------------
+    def fingerprint(self) -> Tuple:
+        """Hashable identity of everything the planner's answer depends on:
+        per-(zone, type) capacity AND effective price.  Two clusters with
+        equal fingerprints yield identical plans, which is what the
+        warm-start replan cache keys on."""
+        rows = []
+        for z in sorted(self.zones, key=lambda z: z.name):
+            for t in sorted(z.capacity):
+                rows.append((z.name, z.region, t, z.capacity[t],
+                             round(z.price_per_sec(t), 12)))
+        return tuple(rows)
+
+    def capacity_diff(self, other: "ClusterSpec"
+                      ) -> Dict[Tuple[str, str], Tuple[int, int]]:
+        """Per-(zone, type) capacity delta from ``self`` to ``other``:
+        {(zone, type): (old, new)} for every pool whose size changed."""
+        old = {(z.name, t): n for z in self.zones
+               for t, n in z.capacity.items()}
+        new = {(z.name, t): n for z in other.zones
+               for t, n in z.capacity.items()}
+        out: Dict[Tuple[str, str], Tuple[int, int]] = {}
+        for key in set(old) | set(new):
+            o, n = old.get(key, 0), new.get(key, 0)
+            if o != n:
+                out[key] = (o, n)
+        return out
+
+    def price_diff(self, other: "ClusterSpec"
+                   ) -> Dict[Tuple[str, str], Tuple[float, float]]:
+        """Per-(zone, type) effective $/chip-hour delta from ``self`` to
+        ``other``: {(zone, type): (old, new)} where the price moved."""
+        out: Dict[Tuple[str, str], Tuple[float, float]] = {}
+        for z in self.zones:
+            try:
+                nz = other.zone(z.name)
+            except KeyError:
+                continue
+            for t in z.capacity:
+                o = z.price_per_sec(t) * 3600.0
+                n = nz.price_per_sec(t) * 3600.0
+                if abs(n - o) > 1e-12:
+                    out[(z.name, t)] = (o, n)
+        return out
+
 
 def single_zone(acc_type: str, chips: int, zone: str = "us-central1-a",
                 region: str = "us-central1") -> ClusterSpec:

@@ -32,6 +32,66 @@ class PlanResult:
     stats: Dict
 
 
+def plan_footprint(plan: ParallelPlan) -> frozenset:
+    """The (zone, gpu_type) pools a materialized plan draws chips from.
+    A capacity change in a disjoint pool cannot invalidate the plan."""
+    return frozenset((r.zone, r.gpu_type)
+                     for s in plan.stages for r in s.replicas)
+
+
+def plan_fits(plan: ParallelPlan, cluster: ClusterSpec) -> bool:
+    """Does the cluster still have the chips this plan is placed on?"""
+    used: Dict[Tuple[str, str], int] = {}
+    for s in plan.stages:
+        for r in s.replicas:
+            used[(r.zone, r.gpu_type)] = used.get((r.zone, r.gpu_type), 0) \
+                + r.tp
+    for (zn, t), n in used.items():
+        try:
+            if n > cluster.zone(zn).capacity.get(t, 0):
+                return False
+        except KeyError:
+            return False
+    return True
+
+
+def rehome_plan(plan: ParallelPlan,
+                cluster: ClusterSpec) -> Optional[ParallelPlan]:
+    """Re-place a plan's replicas onto ``cluster``, keeping the region-level
+    structure (stage splits, per-replica gpu_type/tp, region) and only
+    redistributing across each region's zones (H6).  Because link classes
+    and prices are region-level, a rehomed plan keeps the original's
+    simulated time/cost — this is how a warm replan repairs a previous
+    winner whose exact zone placement no longer fits.  Returns None when
+    some region no longer has the chips."""
+    if plan_fits(plan, cluster):
+        return plan
+    zone_used: Dict[Tuple[str, str], int] = {}
+    stages = []
+    for s in plan.stages:
+        reps: List[StageReplica] = []
+        for r in s.replicas:
+            try:
+                region = cluster.zone(r.zone).region
+            except KeyError:
+                return None
+            zones = sorted(cluster.zones_in_region(region),
+                           key=lambda z: -sum(z.capacity.values()))
+            placed = False
+            for z in zones:
+                used = zone_used.get((z.name, r.gpu_type), 0)
+                if used + r.tp <= z.capacity.get(r.gpu_type, 0):
+                    zone_used[(z.name, r.gpu_type)] = used + r.tp
+                    reps.append(StageReplica(r.gpu_type, r.tp, z.name))
+                    placed = True
+                    break
+            if not placed:
+                return None
+        stages.append(StageConfig(s.layer_start, s.layer_end, tuple(reps)))
+    return ParallelPlan(stages=tuple(stages), mbs=plan.mbs,
+                        global_batch=plan.global_batch)
+
+
 def _materialize(profile: JobProfile, choices: List[StageChoice],
                  regions: List[str], cluster: ClusterSpec,
                  splits, mbs: int, d: int) -> ParallelPlan:
@@ -80,14 +140,46 @@ class SailorPlanner:
         self.use_heuristics = use_heuristics
 
     # -------------------------------------------------------------------------
-    def plan(self, cluster: ClusterSpec, objective: Objective) -> PlanResult:
+    def plan(self, cluster: ClusterSpec, objective: Objective, *,
+             incumbent: Optional[SimResult] = None,
+             reuse: Optional[Dict[Tuple[int, int, int], ParallelPlan]] = None,
+             changed_pools: Optional[frozenset] = None,
+             pp_allow: Optional[frozenset] = None,
+             mbs_allow: Optional[frozenset] = None) -> PlanResult:
+        """Search ``cluster`` for the best plan under ``objective``.
+
+        Warm-start hooks (used by ``repro.manager.replan``):
+
+        * ``incumbent`` — a SimResult already simulated on *this* cluster
+          that satisfies the objective.  It seeds ``best``, so the
+          incumbent-driven budget/time bounds prune from candidate #1.
+        * ``reuse`` — ``{(pp, mbs, d): plan}`` materialized winners from a
+          previous search.  When a candidate's cached plan has a resource
+          footprint disjoint from ``changed_pools`` (the (zone, type) pools
+          whose capacity shrank since that search), shrinking elsewhere only
+          removed options the plan never used — the cached plan is still
+          that candidate's optimum and the DP solve is skipped, leaving
+          only a cheap re-simulation (which also picks up price changes).
+          Callers must not pass ``reuse`` when any pool *grew*: new
+          capacity could beat any cached solution.
+        * ``pp_allow`` / ``mbs_allow`` — restrict the outer search to these
+          pipeline degrees / microbatch sizes (the warm replanner passes a
+          neighborhood of the previous optimum after small deltas; plan
+          shape rarely jumps on a small capacity change, and the caller
+          falls back to an unrestricted search when the restricted one
+          finds nothing).
+        """
         t0 = time.perf_counter()
         regions, region_caps = H.region_pools(cluster)
         total_chips = cluster.total_chips()
         n_layers_units = self.profile.n_partition_units
-        best: Optional[SimResult] = None
+        best: Optional[SimResult] = incumbent
         n_cand = n_eval = n_oom = 0
-        stats: Dict = {"dp_combos": 0, "memo_hits": 0}
+        stats: Dict = {"dp_combos": 0, "memo_hits": 0, "reused": 0,
+                       "lb_pruned": 0, "incumbent": incumbent is not None,
+                       "plans": {}, "scores": {}}
+        if changed_pools is None:
+            changed_pools = frozenset()
 
         budget = objective.max_cost_per_iter
         decreasing = objective.kind == MAX_THROUGHPUT   # H3 vs H4
@@ -95,8 +187,12 @@ class SailorPlanner:
         cluster_types = cluster.gpu_types()
         for pp in H.pp_candidates(self.job.cfg.n_layers, total_chips,
                                   self.max_pp):
+            if pp_allow is not None and pp not in pp_allow:
+                continue
             splits = H.balanced_split(self.profile, pp)
             for mbs in H.mbs_candidates(self.job.global_batch):
+                if mbs_allow is not None and mbs not in mbs_allow:
+                    continue
                 tp_sel = self._tp_selection(pp, splits, mbs, cluster_types)
                 if tp_sel is None:
                     n_oom += 1
@@ -104,6 +200,13 @@ class SailorPlanner:
                 max_d = self._max_d(pp, tp_sel, region_caps)
                 if max_d == 0:
                     continue
+                # capacity-free minimum per-stage compute time: the basis of
+                # the lower-bound prune below (no resource assignment can
+                # make a stage faster than its fastest (type, tp) option).
+                min_t = [min(sum(self.profile.stage_cost(lo, hi, t, tp, mbs)
+                                 [:2])
+                             for t, tps in sel.items() for tp in tps)
+                         for (lo, hi), sel in zip(splits, tp_sel)]
                 d_list = H.dp_candidates(self.job.global_batch, mbs, max_d,
                                          decreasing)
                 min_chips_per_replica = sum(
@@ -112,6 +215,46 @@ class SailorPlanner:
                 for d in d_list:
                     if d * min_chips_per_replica > total_chips:
                         continue             # cannot fit even the cheapest mix
+                    key3 = (pp, mbs, d)
+                    cached = reuse.get(key3) if reuse else None
+                    if cached is not None and \
+                            plan_footprint(cached).isdisjoint(changed_pools) \
+                            and plan_fits(cached, cluster):
+                        res = simulate(self.profile, cached, cluster,
+                                       self.mem_cfg)
+                        n_eval += 1
+                        stats["reused"] += 1
+                        if not res.valid:
+                            n_oom += 1
+                            continue
+                        stats["plans"][key3] = cached
+                        if objective.satisfies(res) and \
+                                objective.better(best, res):
+                            best = res
+                        score = objective.score(res)
+                        stats["scores"][key3] = score
+                        if self.use_heuristics and prev_score is not None \
+                                and score >= prev_score:
+                            break
+                        prev_score = score
+                        continue
+                    # lower-bound prune: even with unlimited capacity this
+                    # (pp, mbs, d) cannot run an iteration faster than
+                    # warmup + steady on its fastest per-stage options, so
+                    # when that already exceeds the incumbent / throughput
+                    # floor (x1.1 slack, matching the DP's bound), skip the
+                    # whole DP solve.
+                    n_micro = self.job.global_batch // (d * mbs)
+                    if objective.kind == MAX_THROUGHPUT:
+                        tb_lb = best.t_iter if best is not None else None
+                    else:
+                        tb_lb = (1.0 / objective.min_throughput
+                                 if objective.min_throughput else None)
+                    if tb_lb is not None and \
+                            sum(min_t) + (n_micro - 1) * max(min_t) \
+                            > tb_lb * 1.1:
+                        stats["lb_pruned"] += 1
+                        continue
                     n_cand += 1
                     # incumbent-driven pruning: best cost so far acts as the
                     # budget for MIN_COST searches (reuses §4.2.3 machinery)
@@ -148,10 +291,12 @@ class SailorPlanner:
                     if not res.valid:
                         n_oom += 1
                         continue
+                    stats["plans"][key3] = plan
                     if objective.satisfies(res) and objective.better(best, res):
                         best = res
                     # H3/H4 early exit within this (pp, mbs) group
                     score = objective.score(res)
+                    stats["scores"][key3] = score
                     if self.use_heuristics and prev_score is not None \
                             and score >= prev_score:
                         break

@@ -1,0 +1,24 @@
+"""repro.manager — the autonomous cluster-manager control plane (§4.4).
+
+Monitor availability feeds, replan incrementally on every change, price
+each transition, and reconfigure the elastic trainer kill-free (or roll
+back, or defer).  See DESIGN.md §8.
+"""
+from repro.manager.controller import (Controller, ControllerConfig,
+                                      fit_runtime_plan)
+from repro.manager.events import (CapacityDown, CapacityUp, ClusterEvent,
+                                  EventBus, NodeFailure, PriceChange,
+                                  Straggler)
+from repro.manager.monitor import AvailabilityMonitor, ListFeed, TraceFeed
+from repro.manager.replan import IncrementalReplanner
+from repro.manager.transition import (DEFER, RESHARD, ROLLBACK,
+                                      TransitionConfig, TransitionDecision,
+                                      TransitionModel)
+
+__all__ = [
+    "AvailabilityMonitor", "CapacityDown", "CapacityUp", "ClusterEvent",
+    "Controller", "ControllerConfig", "DEFER", "EventBus",
+    "IncrementalReplanner", "ListFeed", "NodeFailure", "PriceChange",
+    "RESHARD", "ROLLBACK", "Straggler", "TraceFeed", "TransitionConfig",
+    "TransitionDecision", "TransitionModel", "fit_runtime_plan",
+]

@@ -1,0 +1,123 @@
+"""Plan-transition cost model: reshard vs rollback vs defer (paper §4.4).
+
+When the planner proposes a new plan, switching to it is not free.  The
+controller weighs three outcomes:
+
+* **reshard** (kill-free): live params + optimizer state are re-laid-out
+  onto the new device set.  Cost = bytes moved over the interconnect
+  (alpha-beta model from ``simulator.network``, parallel over the movers)
+  plus communicator teardown/re-setup.
+* **rollback**: devices died with state on them — restore the latest async
+  checkpoint and replay the steps since.  Cost = restore read + setup +
+  lost work.
+* **defer**: do nothing (yet).  Optional improvements (capacity grew, a
+  price moved) must clear two hysteresis gates before the job reconfigures,
+  so a 30-second capacity blip never thrashes it: the projected gain over
+  ``commit_horizon_s`` must exceed the transition cost by
+  ``min_gain_frac``, and the new state must persist for ``hysteresis_s``
+  (the controller re-checks persistence; this model only prices and
+  gates).
+
+Mandatory shrinks (the chips are going away) are never deferred: the only
+question is whether state survives (reshard) or not (rollback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.profiler.hw_specs import LinkSpec
+from repro.core.simulator import network
+
+RESHARD = "reshard"
+ROLLBACK = "rollback"
+DEFER = "defer"
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionConfig:
+    comm_setup_s: float = 2.0       # communicator teardown + re-init
+    restore_bw: float = 1e9         # checkpoint restore read, bytes/s
+    hysteresis_s: float = 120.0     # optional changes must persist this long
+    min_gain_frac: float = 0.05     # and beat cost by this margin
+    commit_horizon_s: float = 1800.0  # window the gain is amortized over
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionDecision:
+    kind: str                       # RESHARD | ROLLBACK | DEFER
+    cost_s: float                   # price of the chosen outcome
+    reason: str
+    details: Dict = dataclasses.field(default_factory=dict)
+
+
+class TransitionModel:
+    def __init__(self, cfg: TransitionConfig = TransitionConfig()):
+        self.cfg = cfg
+
+    # --- costs ----------------------------------------------------------------
+    def reshard_cost_s(self, state_bytes: float, link: LinkSpec,
+                       movers: int = 1) -> float:
+        """Kill-free re-layout: every byte of live state crosses ``link``
+        once (upper bound — overlap between old and new shardings only
+        lowers this), split across ``movers`` parallel senders."""
+        per_mover = state_bytes / max(1, movers)
+        return network.p2p_time(link, per_mover) + self.cfg.comm_setup_s
+
+    def rollback_cost_s(self, state_bytes: float, steps_since_ckpt: int,
+                        t_iter_s: float) -> float:
+        """Restore + replay: read the checkpoint, rebuild communicators,
+        redo every step since the last save."""
+        restore = state_bytes / self.cfg.restore_bw
+        lost_work = max(0, steps_since_ckpt) * t_iter_s
+        return restore + self.cfg.comm_setup_s + lost_work
+
+    # --- decision -------------------------------------------------------------
+    def decide(self, *, mandatory: bool, state_lost: bool,
+               state_bytes: float, link: LinkSpec, movers: int,
+               steps_since_ckpt: int, t_iter_old_s: float,
+               t_iter_new_s: Optional[float],
+               event_age_s: float = 0.0) -> TransitionDecision:
+        """Pick the cheapest sound outcome for one proposed transition.
+
+        ``mandatory``: capacity shrank below what the job runs on.
+        ``state_lost``: the shrink took devices holding live state.
+        ``t_iter_new_s``: simulated iteration time under the new plan
+        (None when the replanner found nothing — with spare capacity gone
+        the job just continues as-is unless the move is mandatory).
+        ``event_age_s``: how long the triggering state has persisted.
+        """
+        reshard = self.reshard_cost_s(state_bytes, link, movers)
+        details = {"reshard_cost_s": reshard}
+        if state_lost:
+            cost = self.rollback_cost_s(state_bytes, steps_since_ckpt,
+                                        t_iter_old_s)
+            return TransitionDecision(
+                ROLLBACK, cost, "state lost with failed devices",
+                {**details, "lost_steps": steps_since_ckpt})
+        if mandatory:
+            return TransitionDecision(
+                RESHARD, reshard, "capacity below current plan; state intact",
+                details)
+        if t_iter_new_s is None or t_iter_new_s >= t_iter_old_s:
+            return TransitionDecision(
+                DEFER, 0.0, "no faster plan available", details)
+        # optional improvement: amortized gain vs transition cost ...
+        gain = (t_iter_old_s - t_iter_new_s) / t_iter_old_s \
+            * self.cfg.commit_horizon_s
+        details.update(gain_s=gain, t_old=t_iter_old_s, t_new=t_iter_new_s)
+        if gain < reshard * (1.0 + self.cfg.min_gain_frac):
+            return TransitionDecision(
+                DEFER, 0.0,
+                f"gain {gain:.1f}s over horizon < reshard {reshard:.1f}s",
+                details)
+        # ... and the persistence gate (anti-thrash)
+        if event_age_s < self.cfg.hysteresis_s:
+            return TransitionDecision(
+                DEFER, 0.0,
+                f"within hysteresis window ({event_age_s:.0f}s "
+                f"< {self.cfg.hysteresis_s:.0f}s)", details)
+        return TransitionDecision(
+            RESHARD, reshard,
+            f"gain {gain:.1f}s over horizon clears reshard {reshard:.1f}s",
+            details)

@@ -51,16 +51,23 @@ class RuntimePlan:
 
 
 class StragglerDetector:
-    def __init__(self, factor: float = 3.0, window: int = 20):
+    def __init__(self, factor: float = 3.0, window: int = 20,
+                 warmup: int = 5):
         self.factor = factor
         self.times: List[float] = []
         self.window = window
+        self.warmup = warmup
         self.events: List[int] = []
 
     def observe(self, step: int, dt: float) -> bool:
+        """Flag ``step`` if ``dt`` exceeds ``factor``x the median of the
+        last ``window`` completed steps (the history excludes ``dt``
+        itself, else a slow step would drag its own baseline up)."""
+        hist = self.times[-self.window:]
         self.times.append(dt)
-        hist = self.times[-self.window:-1]
-        if len(hist) >= 5 and dt > self.factor * float(np.median(hist)):
+        del self.times[:-self.window]        # bound memory for long runs
+        if len(hist) >= self.warmup and \
+                dt > self.factor * float(np.median(hist)):
             self.events.append(step)
             return True
         return False
@@ -163,6 +170,9 @@ class ElasticTrainer:
         else:
             self.build(n_devices)
             kind = "kill-free"
+        # step times change scale with the device set; a stale median would
+        # flag every post-reconfig (re-jit) step as a straggler.
+        self.detector.times.clear()
         self.reconfigs.append({
             "step": step_at_event, "resumed_at": self.step,
             "n_devices": n_devices, "kind": kind,
@@ -197,5 +207,8 @@ class ElasticTrainer:
             if self.step % self.checkpoint_every == 0:
                 self.ckpt.save(self.step, {
                     "params": self.params, "opt": self.opt_state})
-        self.ckpt.wait()
+        # saves stay in flight: joining here would put checkpoint I/O on
+        # the critical path of callers stepping one step at a time (the
+        # manager.Controller loop).  save()/restore() already serialize
+        # against the in-flight write; call ckpt.wait() for durability.
         return self.log

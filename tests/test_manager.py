@@ -1,0 +1,363 @@
+"""repro.manager control plane: events, monitor, replan, transition, loop."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import (AvailabilityTrace, ClusterSpec, multi_zone,
+                                single_zone)
+from repro.core.planner.objectives import (MAX_THROUGHPUT, MIN_COST,
+                                           Objective)
+from repro.core.planner.search import plan_fits, rehome_plan
+from repro.core.profiler.analytic import TrainJob
+from repro.core.profiler.hw_specs import LinkSpec
+from repro.manager import (AvailabilityMonitor, CapacityDown, CapacityUp,
+                           EventBus, IncrementalReplanner, ListFeed,
+                           NodeFailure, PriceChange, Straggler, TraceFeed,
+                           TransitionConfig, TransitionModel,
+                           fit_runtime_plan)
+from repro.manager.transition import DEFER, RESHARD, ROLLBACK
+from repro.train.elastic import StragglerDetector
+
+from tests.helpers import run_py
+
+
+# --- events ------------------------------------------------------------------
+def test_event_bus_ordering_and_subscribe():
+    bus = EventBus()
+    seen, failures = [], []
+    bus.subscribe(lambda e: seen.append(e))
+    bus.subscribe(lambda e: failures.append(e), NodeFailure)
+    bus.publish(CapacityUp(time_s=1.0, zone="z", acc_type="a",
+                           available=4, delta=2))
+    bus.publish(NodeFailure(time_s=2.0, zone="z", acc_type="a",
+                            available=0, lost=4))
+    assert [type(e) for e in seen] == [CapacityUp, NodeFailure]
+    assert failures == [seen[1]]
+    assert bus.of_type(NodeFailure) == [seen[1]]
+    with pytest.raises(ValueError):
+        bus.publish(CapacityUp(time_s=1.5))    # out of order
+
+
+# --- monitor -----------------------------------------------------------------
+def _cluster(n=8, price=None):
+    c = single_zone("cpu-host", n)
+    if price is not None:
+        c = c.with_price({("us-central1-a", "cpu-host"): price})
+    return c
+
+
+def test_monitor_classification():
+    c8 = _cluster(8)
+    feed = ListFeed([
+        (10.0, _cluster(12)),            # up
+        (20.0, _cluster(11)),            # gradual down (1/12 < 0.5)
+        (30.0, _cluster(4)),             # bulk drop (7/11 >= 0.5)
+        (40.0, _cluster(4, price=0.05)),  # price move only
+    ])
+    mon = AvailabilityMonitor(c8, [feed])
+    evs = mon.drain()
+    assert [type(e) for e in evs] == [CapacityUp, CapacityDown, NodeFailure,
+                                      PriceChange]
+    assert evs[0].delta == 4 and evs[0].available == 12
+    assert evs[1].delta == 1
+    assert evs[2].lost == 7 and evs[2].available == 4
+    assert evs[3].price_per_hour == pytest.approx(0.05)
+    # events carry the post-event snapshot and the bus logged everything
+    assert evs[2].cluster.total_chips() == 4
+    assert mon.bus.log == evs
+    assert mon.current.fingerprint() == _cluster(4, price=0.05).fingerprint()
+
+
+def test_trace_feed_matches_change_points():
+    c = single_zone("cpu-host", 8)
+    trace = AvailabilityTrace(c, seed=3, step_s=60, horizon_s=1800,
+                              preempt_prob=0.3)
+    n_points = sum(1 for _ in trace.change_points())
+    mon = AvailabilityMonitor(c, [TraceFeed(trace)])
+    evs = mon.drain()
+    # single (zone, type) pool: one event per change point
+    assert len(evs) == n_points
+    assert all(isinstance(e, (CapacityUp, CapacityDown, NodeFailure))
+               for e in evs)
+
+
+def test_monitor_poll_respects_time():
+    c = _cluster(8)
+    feed = ListFeed([(10.0, _cluster(4)), (100.0, _cluster(8))])
+    mon = AvailabilityMonitor(c, [feed])
+    assert len(mon.poll(50.0)) == 1
+    assert len(mon.poll(50.0)) == 0
+    assert len(mon.poll(200.0)) == 1
+
+
+def test_change_points_deterministic():
+    c = single_zone("cpu-host", 16)
+    trace = lambda s: AvailabilityTrace(c, seed=s, step_s=60,  # noqa: E731
+                                        horizon_s=3600, preempt_prob=0.1)
+    a = [(t, cl.fingerprint()) for t, cl in trace(11).change_points()]
+    b = [(t, cl.fingerprint()) for t, cl in trace(11).change_points()]
+    other = [(t, cl.fingerprint()) for t, cl in trace(12).change_points()]
+    assert a == b
+    assert a != other
+
+
+# --- incremental replanner ---------------------------------------------------
+GEO = multi_zone({
+    "us-central1-a": ("us-central1", {"A100-40": 16}),
+    "us-west1-a":    ("us-west1",    {"A100-40": 16}),
+})
+
+
+def _job():
+    return TrainJob(cfg=get_config("smollm_360m"), seq_len=512,
+                    global_batch=64)
+
+
+def test_replanner_cold_warm_hit():
+    rp = IncrementalReplanner(_job(), Objective(MAX_THROUGHPUT))
+    r1 = rp.replan(GEO)
+    assert r1.stats["cache"] == "cold" and r1.best is not None
+    shrunk = GEO.with_capacity({("us-central1-a", "A100-40"): 12})
+    r2 = rp.replan(shrunk)
+    assert r2.stats["cache"] == "warm" and r2.best is not None
+    assert plan_fits(r2.best.plan, shrunk)
+    r3 = rp.replan(GEO)        # grew back: full fingerprint previously seen
+    assert r3.stats["cache"] == "hit"
+    assert r3.best.plan == r1.best.plan
+    assert rp.stats == {"replans": 3, "exact_hits": 1, "certified": 0,
+                        "warm": 1, "cold": 1} or rp.stats["certified"] == 1
+
+
+def test_replanner_certified_on_disjoint_shrink():
+    rp = IncrementalReplanner(_job(), Objective(MAX_THROUGHPUT))
+    r1 = rp.replan(GEO)
+    unused = [z for z in ("us-central1-a", "us-west1-a")
+              if z not in {r.zone for s in r1.best.plan.stages
+                           for r in s.replicas}]
+    if not unused:
+        pytest.skip("best plan spans both regions")
+    shrunk = GEO.with_capacity({(unused[0], "A100-40"): 2})
+    r2 = rp.replan(shrunk)
+    assert r2.stats["certified"]
+    assert r2.best.t_iter == pytest.approx(r1.best.t_iter, rel=1e-6)
+    assert r2.n_candidates == 0          # no search ran
+
+
+def test_replanner_price_change_invalidates_reuse():
+    """A pure price change must re-open the region decision (regression:
+    an empty capacity delta used to mark every cached candidate reusable,
+    so min-cost plans could never chase a discount)."""
+    job = _job()
+    floor = Objective(MIN_COST, min_throughput=1e-6)
+    rp = IncrementalReplanner(job, floor)
+    r1 = rp.replan(GEO)
+    zones1 = {r.zone for s in r1.best.plan.stages for r in s.replicas}
+    # make the *other* region 20x cheaper
+    other = "us-west1-a" if zones1 <= {"us-central1-a"} else "us-central1-a"
+    disc = GEO.with_price({(other, "A100-40"): 3.67 / 20})
+    r2 = rp.replan(disc)
+    zones2 = {r.zone for s in r2.best.plan.stages for r in s.replicas}
+    assert zones2 <= {other}, (zones1, zones2)
+    assert r2.best.cost_per_iter < r1.best.cost_per_iter
+
+
+def test_rehome_plan_preserves_structure():
+    rp = IncrementalReplanner(_job(), Objective(MAX_THROUGHPUT))
+    r1 = rp.replan(GEO)
+    plan = r1.best.plan
+    # force the plan out of its zones via a zone-level shuffle inside the
+    # same region: add a sibling zone and drain the original
+    bigger = dataclasses.replace(GEO, zones=GEO.zones + (
+        dataclasses.replace(GEO.zones[0], name="us-central1-b"),))
+    drained = bigger.with_capacity({("us-central1-a", "A100-40"): 0})
+    moved = rehome_plan(plan, drained)
+    if any(r.zone == "us-central1-a" for s in plan.stages
+           for r in s.replicas):
+        assert moved is not None
+        assert plan_fits(moved, drained)
+        assert moved.mbs == plan.mbs and moved.pp == plan.pp
+        assert [s.n_chips for s in moved.stages] == \
+            [s.n_chips for s in plan.stages]
+    # a cluster without the capacity anywhere in-region -> None
+    assert rehome_plan(plan, single_zone("V100-16", 1)) is None
+
+
+# --- transition cost model ---------------------------------------------------
+def test_transition_cost_monotonic():
+    tm = TransitionModel()
+    link = LinkSpec("l", alpha=1e-4, beta=10e9)
+    slow = LinkSpec("s", alpha=1e-4, beta=1e9)
+    last = -1.0
+    for nbytes in (1e6, 1e8, 1e9, 1e10):
+        c = tm.reshard_cost_s(nbytes, link, movers=8)
+        assert c >= last       # more bytes moved => never cheaper
+        assert tm.reshard_cost_s(nbytes, slow, movers=8) >= c  # slower link
+        last = c
+    r = [tm.rollback_cost_s(1e9, k, 2.0) for k in (0, 5, 50)]
+    assert r == sorted(r)      # more lost work => never cheaper
+
+
+def test_transition_decide_outcomes():
+    tm = TransitionModel(TransitionConfig(hysteresis_s=120.0,
+                                          commit_horizon_s=1800.0))
+    link = LinkSpec("l", alpha=1e-4, beta=10e9)
+    kw = dict(state_bytes=1e9, link=link, movers=8, steps_since_ckpt=3,
+              t_iter_old_s=2.0)
+    assert tm.decide(mandatory=True, state_lost=True, t_iter_new_s=2.0,
+                     **kw).kind == ROLLBACK
+    assert tm.decide(mandatory=True, state_lost=False, t_iter_new_s=2.5,
+                     **kw).kind == RESHARD
+    # big gain but too young -> defer; old enough -> reshard
+    young = tm.decide(mandatory=False, state_lost=False, t_iter_new_s=1.0,
+                      event_age_s=10.0, **kw)
+    assert young.kind == DEFER and "hysteresis" in young.reason
+    assert tm.decide(mandatory=False, state_lost=False, t_iter_new_s=1.0,
+                     event_age_s=600.0, **kw).kind == RESHARD
+    # negligible gain -> defer regardless of age
+    assert tm.decide(mandatory=False, state_lost=False, t_iter_new_s=1.999,
+                     event_age_s=600.0, **kw).kind == DEFER
+    # no better plan -> defer
+    assert tm.decide(mandatory=False, state_lost=False, t_iter_new_s=None,
+                     event_age_s=600.0, **kw).kind == DEFER
+
+
+# --- straggler detector (satellite fix) --------------------------------------
+def test_straggler_warmup():
+    det = StragglerDetector(factor=3.0, window=10, warmup=5)
+    for i in range(4):
+        assert not det.observe(i, 10.0)   # huge values, still warming up
+    assert not det.observe(4, 0.1)
+    # 5 completed samples now -> detection active
+    assert det.observe(5, 40.0)
+    assert det.events == [5]
+
+
+def test_straggler_newest_sample_in_window():
+    """The sample completed just before the current one must be part of
+    the median even after the buffer wraps (regression: the old slice
+    dropped it once len(times) exceeded the window)."""
+    det = StragglerDetector(factor=3.0, window=5, warmup=5)
+    for i in range(20):
+        det.observe(i, 0.1)
+    assert len(det.times) == 5            # memory bounded
+    # one slow step enters history, then a moderately slow step: median of
+    # [0.1, 0.1, 0.1, 0.1, 0.9] is still 0.1 -> flag
+    det.observe(20, 0.9)
+    assert det.observe(21, 0.35)
+    # but history [0.1 x4, 0.9] must really contain the 0.9: a fresh
+    # detector that never saw it would flag 0.35 too, while after several
+    # 0.9s the median shifts and 0.35 stops flagging
+    for i in range(3):
+        det.observe(22 + i, 0.9)
+    assert not det.observe(25, 0.35)      # median now 0.9
+
+
+def test_straggler_old_spike_leaves_window():
+    det = StragglerDetector(factor=3.0, window=5, warmup=5)
+    det.observe(0, 9.0)                   # ancient spike
+    for i in range(1, 6):
+        det.observe(i, 0.1)
+    # spike has rolled out of the 5-sample window -> 0.35 flags
+    assert det.observe(6, 0.35)
+
+
+# --- runtime-plan projection -------------------------------------------------
+def test_fit_runtime_plan():
+    rp = fit_runtime_plan(8, global_batch=8, num_microbatches=2)
+    assert (rp.dp, rp.tp) == (8, 1) and rp.num_microbatches == 2
+    # tp preference from the planner plan is honored where divisible
+    res = IncrementalReplanner(_job(), Objective(MAX_THROUGHPUT)).replan(GEO)
+    rt = fit_runtime_plan(8, global_batch=64, num_microbatches=1,
+                          plan=res.best.plan)
+    assert rt.dp * rt.tp == 8
+    # dp never violates batch divisibility
+    rt = fit_runtime_plan(8, global_batch=4, num_microbatches=1)
+    assert rt.dp * rt.tp == 8 and 4 % rt.dp == 0
+
+
+def test_controller_price_blip_dropped(tmp_path):
+    """A price discount that reverts before hysteresis must clear its
+    pending min-cost reshard instead of committing a discount-era plan."""
+    from repro.manager import (AvailabilityMonitor, Controller,
+                               ControllerConfig, TransitionModel)
+    from repro.train import data as data_lib
+    from repro.train import optimizer as opt_lib
+    from repro.train.elastic import ElasticTrainer
+
+    cfg = get_config("smollm_360m").reduced()
+    c0 = single_zone("cpu-host", 1)
+    disc = c0.with_price({("us-central1-a", "cpu-host"): 0.01})
+    feed = ListFeed([(60.0, disc), (120.0, c0)])
+    job = TrainJob(cfg=cfg, seq_len=16, global_batch=4)
+    trainer = ElasticTrainer(
+        cfg, opt_lib.OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                     total_steps=20),
+        data_lib.DataConfig(seq_len=16, global_batch=4),
+        workdir=str(tmp_path), checkpoint_every=100)
+    ctl = Controller(
+        trainer, AvailabilityMonitor(c0, [feed]),
+        IncrementalReplanner(job, Objective(MAX_THROUGHPUT)),
+        transition=TransitionModel(TransitionConfig(hysteresis_s=600.0)),
+        config=ControllerConfig(step_time_s=60.0, max_devices=1))
+    ctl.run(5)
+    assert any(d.get("pending") and "PriceChange" in d["event"]
+               for d in ctl.decisions), ctl.summary()
+    assert any(d.get("blip") and "PriceChange" in d["event"]
+               for d in ctl.decisions), ctl.summary()
+    assert ctl.pending_price is None
+    assert trainer.reconfigs == []
+
+
+# --- end-to-end controller loop (8 host devices) -----------------------------
+@pytest.mark.slow
+def test_controller_end_to_end():
+    out = run_py("""
+        import math
+        from repro.configs import get_config
+        from repro.core.cluster import single_zone
+        from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+        from repro.core.profiler.analytic import TrainJob
+        from repro.manager import (AvailabilityMonitor, Controller,
+                                   ControllerConfig, IncrementalReplanner,
+                                   ListFeed, TransitionConfig,
+                                   TransitionModel)
+        from repro.train import data as data_lib, optimizer as opt_lib
+        from repro.train.elastic import ElasticTrainer
+
+        c = lambda n: single_zone("cpu-host", n)
+        feed = ListFeed([
+            (60.0, c(8)),     # upscale 4 -> 8: deferred (hysteresis)
+            (120.0, c(4)),    # reverts before commit: the blip is dropped
+            (300.0, c(8)),    # sustained upscale -> kill-free reshard
+            (720.0, c(2)),    # bulk preemption -> rollback
+        ])
+        cfg = get_config("smollm_360m").reduced()
+        data_cfg = data_lib.DataConfig(seq_len=16, global_batch=8)
+        opt_cfg = opt_lib.OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                          total_steps=40)
+        job = TrainJob(cfg=cfg, seq_len=16, global_batch=8)
+        import tempfile
+        trainer = ElasticTrainer(cfg, opt_cfg, data_cfg,
+                                 workdir=tempfile.mkdtemp(),
+                                 checkpoint_every=3)
+        ctl = Controller(
+            trainer, AvailabilityMonitor(c(4), [feed]),
+            IncrementalReplanner(job, Objective(MAX_THROUGHPUT)),
+            transition=TransitionModel(TransitionConfig(hysteresis_s=120.0)),
+            config=ControllerConfig(step_time_s=60.0, max_devices=8))
+        log = ctl.run(16)
+        kinds = [r["kind"] for r in trainer.reconfigs]
+        blips = [d for d in ctl.decisions if d.get("blip")]
+        assert "kill-free" in kinds, ctl.summary()
+        assert "rollback" in kinds, ctl.summary()
+        assert len(blips) == 1, ctl.summary()
+        assert all(math.isfinite(r["loss"]) for r in log), log
+        assert len(log) == 16
+        devices = {r["n_devices"] for r in log}
+        assert devices == {2, 4, 8}, (devices, ctl.summary())
+        print("OUTCOMES", sorted(set(kinds)), len(blips),
+              ctl.replanner.stats["replans"])
+    """)
+    assert "OUTCOMES ['kill-free', 'rollback'] 1" in out
