@@ -1,11 +1,30 @@
-"""Figures 5/6 analog: simulator accuracy on this rig.
+"""Figures 5/6 analog: simulator accuracy on this rig, with a CI gate.
 
-Memory: the simulator's per-worker peak estimate vs XLA's compiled
-memory_analysis for a grid of (arch, mbs) single-device train steps.
-Timing: simulator iteration-time prediction (with the calibrated cpu-host
-profile) vs real measured wall-clock of the jitted step on CPU.
+Three sections:
+
+* **Memory** — the simulator's per-worker peak estimate vs XLA's compiled
+  ``memory_analysis`` for a grid of (arch, mbs) single-device train steps.
+* **Single-program timing** — closed-form vs event-engine iteration-time
+  prediction (calibrated cpu-host profile) against real wall-clock of the
+  jitted step on CPU.  Both models see the same compute profile; the
+  single jitted program has no per-microbatch dispatch, so the engine runs
+  uncalibrated here and the two should roughly tie.
+* **Pipeline timing** — real ``MPMDPipeline.train_step`` wall-clock over a
+  (pp, n_micro) grid vs the event engine with overheads fitted by
+  ``measured.calibrate_engine`` and vs the raw closed form.  This is where
+  the closed form's serialized-communication bias shows and the engine's
+  calibration loop pays off.  Skipped when the host exposes one device
+  (CI sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+Gate: with ``SIM_ACCURACY_GATE=1`` (the ``simulator-accuracy`` CI job) the
+run fails if the engine's median timing error exceeds the checked-in
+budget (``benchmarks/accuracy_budget.json``) or is worse than the closed
+form it replaced.
 """
 import dataclasses
+import json
+import os
+import pathlib
 import time
 
 import jax
@@ -18,6 +37,7 @@ from repro.core.planner.plan import homogeneous_plan
 from repro.core.profiler import measured
 from repro.core.profiler.analytic import JobProfile, TrainJob
 from repro.core.simulator import memory as mem_mod
+from repro.core.simulator import timing as tim
 from repro.core.simulator.simulate import simulate
 from repro.models import model as model_lib
 from repro.train import data as data_lib
@@ -28,14 +48,14 @@ from benchmarks.common import emit
 
 ARCHS = ("smollm_360m", "qwen1_5_0_5b", "mamba2_130m")
 SEQ = 64
+BUDGET_PATH = pathlib.Path(__file__).parent / "accuracy_budget.json"
 
 
 def _reduced(arch):
     return dataclasses.replace(get_config(arch).reduced(), remat="none")
 
 
-def run():
-    mem_errors, time_errors = [], []
+def _single_program_section(mem_errors, closed_errs, engine_errs):
     mem_cfg = mem_mod.MemoryModelConfig(
         param_bytes=4, grad_bytes=4, opt_bytes=8,     # fp32 runtime
         fragmentation=1.0, runtime_overhead=0.0)
@@ -68,7 +88,6 @@ def run():
                                                  mem_cfg)
             mem_err = abs(pred_mem - actual_mem) / actual_mem
             mem_errors.append(mem_err)
-            mem_abs_mb = abs(pred_mem - actual_mem) / 1e6
             # timing
             p2, o2, _ = step(params, opt_state, batch)  # compile+warm
             jax.block_until_ready(p2)
@@ -77,17 +96,83 @@ def run():
                 p2, o2, m = step(p2, o2, batch)
                 jax.block_until_ready(m["loss"])
             actual_t = (time.perf_counter() - t0) / 3
-            pred_t = simulate(profile, plan, cluster).t_iter
-            t_err = abs(pred_t - actual_t) / actual_t
-            time_errors.append(t_err)
+            t_closed = tim.closed_form_iteration_time(
+                profile, plan, cluster).t_iter
+            t_engine = simulate(profile, plan, cluster).t_iter
+            e_c = abs(t_closed - actual_t) / actual_t
+            e_e = abs(t_engine - actual_t) / actual_t
+            closed_errs.append(e_c)
+            engine_errs.append(e_e)
             emit(f"fig5/{arch}_mbs{mbs}", actual_t * 1e6,
                  f"mem_pred={pred_mem/1e6:.1f}MB mem_act={actual_mem/1e6:.1f}MB "
-                 f"mem_err={mem_err*100:.1f}% (abs {mem_abs_mb:.0f}MB) "
-                 f"t_pred={pred_t*1e3:.1f}ms "
-                 f"t_act={actual_t*1e3:.1f}ms t_err={t_err*100:.1f}%")
+                 f"mem_err={mem_err*100:.1f}% "
+                 f"t_act={actual_t*1e3:.1f}ms "
+                 f"closed_err={e_c*100:.1f}% engine_err={e_e*100:.1f}%")
+
+
+def _pipeline_section(closed_errs, engine_errs):
+    """Engine-vs-MPMDPipeline wall-clock (the calibration loop's payoff)."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        emit("fig5/pipeline_skipped", 0.0,
+             f"only {n_dev} host device(s); set XLA_FLAGS="
+             "--xla_force_host_platform_device_count=8")
+        return
+    cfg = dataclasses.replace(_reduced("smollm_360m"), tie_embeddings=False)
+    cal = measured.calibrate_engine(cfg, seq_len=32, mbs=2,
+                                    n_micro_grid=(1, 2), max_pp=2)
+    cluster = single_zone("cpu-host", 2)
+    zone = cluster.zones[0].name
+    for pp in (1, 2):
+        for n_micro in (2, 4):
+            gbs = n_micro * 2
+            job = TrainJob(cfg=cfg, seq_len=32, global_batch=gbs)
+            profile = JobProfile(job)
+            plan = homogeneous_plan("cpu-host", zone, pp, 1, 1,
+                                    profile.n_partition_units, 2, gbs)
+            actual = measured.measure_pipeline_step(cfg, pp, n_micro, 2, 32)
+            t_engine = tim.iteration_time(profile, plan, cluster,
+                                          cal.engine_cfg).t_iter
+            t_closed = tim.closed_form_iteration_time(
+                profile, plan, cluster).t_iter
+            e_e = abs(t_engine - actual) / actual
+            e_c = abs(t_closed - actual) / actual
+            engine_errs.append(e_e)
+            closed_errs.append(e_c)
+            emit(f"fig5/pipe_pp{pp}_nm{n_micro}", actual * 1e6,
+                 f"t_act={actual*1e3:.1f}ms engine={t_engine*1e3:.1f}ms "
+                 f"closed={t_closed*1e3:.1f}ms "
+                 f"engine_err={e_e*100:.1f}% closed_err={e_c*100:.1f}%")
+
+
+def run(gate=None):
+    if gate is None:
+        gate = os.environ.get("SIM_ACCURACY_GATE", "") not in ("", "0")
+    mem_errors, closed_errs, engine_errs = [], [], []
+    _single_program_section(mem_errors, closed_errs, engine_errs)
+    _pipeline_section(closed_errs, engine_errs)
+    med_engine = float(np.median(engine_errs))
+    med_closed = float(np.median(closed_errs))
     emit("fig5/summary", 0.0,
          f"mem_err_mean={np.mean(mem_errors)*100:.1f}% "
-         f"time_err_mean={np.mean(time_errors)*100:.1f}% "
+         f"time_err_median engine={med_engine*100:.1f}% "
+         f"closed={med_closed*100:.1f}% "
          "(toy MB-scale: relative mem err dominated by XLA workspace "
          "padding; production-scale memory validation = dry-run "
          "memory_analysis, see EXPERIMENTS.md)")
+    if gate:
+        budget = json.loads(BUDGET_PATH.read_text())
+        ceil = budget["median_time_err_max"]
+        margin = budget["engine_vs_closed_margin"]
+        if med_engine > ceil:
+            raise SystemExit(
+                f"simulator-accuracy gate: engine median timing error "
+                f"{med_engine:.3f} exceeds budget {ceil:.3f}")
+        if med_engine > med_closed * margin + budget["abs_slack"]:
+            raise SystemExit(
+                f"simulator-accuracy gate: engine median error "
+                f"{med_engine:.3f} worse than closed form {med_closed:.3f} "
+                f"(margin {margin}x + {budget['abs_slack']})")
+        emit("fig5/gate", 0.0,
+             f"PASS engine_median={med_engine*100:.1f}% <= "
+             f"budget {ceil*100:.0f}% and <= closed*{margin}")

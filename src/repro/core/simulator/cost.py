@@ -27,27 +27,34 @@ def compute_cost(plan: ParallelPlan, cluster: ClusterSpec,
 
 def comm_cost(profile: JobProfile, plan: ParallelPlan,
               cluster: ClusterSpec) -> float:
+    from repro.core.simulator.timing import boundary_route
+
     cost = 0.0
     n_micro = plan.num_microbatches
     act = profile.boundary_bytes(plan.mbs)
-    # pipeline p2p across zones: fwd activation + bwd gradient per microbatch
+    # pipeline p2p across zones: fwd activation + bwd gradient per
+    # microbatch, following the explicit sender->receiver routing (stages
+    # may have unequal replica counts)
     for i in range(plan.pp - 1):
-        for d in range(plan.dp):
+        for d in range(plan.stages[i].dp):
             z_a = plan.stages[i].replicas[d].zone
-            z_b = plan.stages[i + 1].replicas[d].zone
+            recv = boundary_route(plan, i, d)
+            z_b = plan.stages[i + 1].replicas[recv].zone
             price = cluster.egress_price(z_a, z_b)
             if price > 0:
                 cost += 2 * act * n_micro * price
-    # DP sync rings crossing zones: 2 x payload per boundary crossing
+    # DP sync rings crossing zones: 2 x per-shard payload per boundary
+    # crossing (hierarchical sync sends each replica's own shard, not the
+    # largest shard over every link)
     for i, st in enumerate(plan.stages):
         zones = st.zones()
         if len(zones) > 1:
             params = profile.stage_params(st.layer_start, st.layer_end)
-            tp_min = min(r.tp for r in st.replicas)
-            nbytes = params / tp_min * DTYPE_BYTES
             worst = max(cluster.egress_price(a, b)
                         for a in zones for b in zones if a != b)
-            cost += 2 * 2 * nbytes * worst
+            for rep in st.replicas:
+                shard = params / rep.tp * DTYPE_BYTES
+                cost += 2 * 2 * shard * worst / st.dp
     return cost
 
 

@@ -4,24 +4,33 @@
 per-worker peak memory + OOM validity, and $/iteration.  The planner calls
 this to rank candidates; the benchmarks call it to evaluate *every*
 baseline's plans under one consistent model (the paper's §5.2 methodology).
+Timing comes from the event engine (``core/simulator/engine.py``) behind
+the ``timing.iteration_time`` facade; pass ``engine_cfg`` to change the
+schedule / overlap / calibrated-overhead knobs.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 from repro.core.cluster import ClusterSpec
 from repro.core.planner.plan import ParallelPlan
 from repro.core.profiler.analytic import JobProfile
 from repro.core.simulator import cost as cost_mod
+from repro.core.simulator import engine as eng
 from repro.core.simulator import memory as mem_mod
 from repro.core.simulator import timing as time_mod
+
+# Below this, an iteration time is a degenerate-profile artifact (zero-cost
+# calibrated stages), not a prediction: flag the plan instead of dividing.
+MIN_ITER_TIME_S = 1e-9
 
 
 @dataclasses.dataclass
 class SimResult:
     plan: ParallelPlan
-    valid: bool                  # memory-feasible (no OOM on any worker)
+    valid: bool                  # memory-feasible AND non-degenerate timing
     t_iter: float
     throughput: float            # iterations / second
     samples_per_s: float
@@ -31,6 +40,7 @@ class SimResult:
     peak_mem: List[List[Dict]]   # per stage, per replica
     timing: time_mod.TimingBreakdown
     plan_seq_len: int = 0
+    degenerate: bool = False     # timing below MIN_ITER_TIME_S / non-finite
 
     @property
     def tokens_per_s(self) -> float:
@@ -39,16 +49,25 @@ class SimResult:
 
 def simulate(profile: JobProfile, plan: ParallelPlan,
              cluster: ClusterSpec,
-             mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM
-             ) -> SimResult:
+             mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM,
+             engine_cfg: Optional[eng.EngineConfig] = None) -> SimResult:
     plan.validate()
     mem = mem_mod.plan_memory(profile, plan, mem_cfg)
     valid = all(r["ok"] for row in mem for r in row)
-    t = time_mod.iteration_time(profile, plan, cluster)
+    t = time_mod.iteration_time(profile, plan, cluster, engine_cfg)
+    degenerate = not (math.isfinite(t.t_iter)
+                      and t.t_iter >= MIN_ITER_TIME_S)
     c = cost_mod.iteration_cost(profile, plan, cluster, t.t_iter)
+    if degenerate:
+        throughput = samples_per_s = 0.0
+        valid = False
+    else:
+        throughput = 1.0 / t.t_iter
+        samples_per_s = plan.global_batch / t.t_iter
     return SimResult(
         plan=plan, valid=valid, t_iter=t.t_iter,
-        throughput=1.0 / t.t_iter,
-        samples_per_s=plan.global_batch / t.t_iter,
+        throughput=throughput,
+        samples_per_s=samples_per_s,
         cost_per_iter=c["total"], cost_comp=c["comp"], cost_comm=c["comm"],
-        peak_mem=mem, timing=t, plan_seq_len=profile.job.seq_len)
+        peak_mem=mem, timing=t, plan_seq_len=profile.job.seq_len,
+        degenerate=degenerate)

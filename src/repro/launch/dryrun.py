@@ -110,7 +110,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         bytes_dev = scaled.bytes_accessed
         per_dev_mem = (mem.argument_size_in_bytes + mem.output_size_in_bytes
                        + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
-        # roofline terms (per device == per chip; see DESIGN.md §6)
+        # roofline terms (per device == per chip; see DESIGN.md §7)
         t_comp = flops_dev / PEAK_FLOPS
         t_mem = bytes_dev / HBM_BW
         t_coll = scaled.collective_traffic / ICI_BW

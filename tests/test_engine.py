@@ -1,0 +1,343 @@
+"""Event-engine tests: analytic-limit equivalence, monotonicity/lower-bound
+properties, hierarchical cross-zone sync, uneven-DP routing, degenerate-plan
+guards, and the interleaved schedule."""
+import dataclasses
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.cluster import multi_zone, single_zone
+from repro.core.planner.plan import (ParallelPlan, StageConfig, StageReplica,
+                                     homogeneous_plan)
+from repro.core.profiler.analytic import DTYPE_BYTES, JobProfile, TrainJob
+from repro.core.profiler.hw_specs import LinkSpec
+from repro.core.simulator import engine as eng
+from repro.core.simulator import network
+from repro.core.simulator import timing as tim
+from repro.core.simulator.simulate import simulate
+
+OPT = get_config("opt-350m")
+CLUSTER = single_zone("A100-40", 256)
+ZONE = "us-central1-a"
+
+
+def _profile(gbs=256, seq=2048):
+    return JobProfile(TrainJob(cfg=OPT, seq_len=seq, global_batch=gbs))
+
+
+def _plan(pp=2, dp=2, tp=1, mbs=1, gbs=256, gpu="A100-40", zone=ZONE):
+    prof = _profile(gbs)
+    return homogeneous_plan(gpu, zone, pp, dp, tp,
+                            prof.n_partition_units, mbs, gbs), prof
+
+
+# --- analytic-limit equivalence ----------------------------------------------
+
+def test_engine_no_overlap_matches_closed_form_homogeneous():
+    """With overlap disabled the engine degrades to the closed formula."""
+    no_overlap = eng.EngineConfig(overlap_comm=False)
+    for pp, dp, mbs in [(1, 1, 2), (3, 1, 1), (4, 2, 2), (3, 4, 1)]:
+        plan, prof = _plan(pp=pp, dp=dp, mbs=mbs)
+        e = tim.iteration_time(prof, plan, CLUSTER, no_overlap)
+        c = tim.closed_form_iteration_time(prof, plan, CLUSTER)
+        assert e.t_iter == pytest.approx(c.t_iter, rel=0.05), (pp, dp, mbs)
+
+
+def test_engine_overlap_never_slower_than_closed_form():
+    """Overlap can only hide communication, not add critical-path time."""
+    for pp, dp in [(2, 2), (4, 4), (1, 8)]:
+        plan, prof = _plan(pp=pp, dp=dp, mbs=2)
+        e = tim.iteration_time(prof, plan, CLUSTER)
+        c = tim.closed_form_iteration_time(prof, plan, CLUSTER)
+        assert e.t_iter <= c.t_iter * 1.001, (pp, dp)
+
+
+# --- property tests ----------------------------------------------------------
+
+@given(pp=st.sampled_from([1, 2, 4]), mbs=st.sampled_from([1, 2, 4]))
+@settings(max_examples=10, deadline=None)
+def test_engine_monotone_in_microbatch_count(pp, mbs):
+    """More microbatches (larger global batch, same plan shape) never make
+    the iteration faster."""
+    prev = 0.0
+    for gbs in (32, 64, 128, 256, 512):
+        plan, prof = _plan(pp=pp, dp=2, mbs=mbs, gbs=gbs)
+        t = tim.iteration_time(prof, plan, CLUSTER).t_iter
+        assert t >= prev - 1e-12, (gbs, t, prev)
+        prev = t
+
+
+@given(pp=st.sampled_from([1, 2, 3, 4]), dp=st.sampled_from([1, 2, 4]),
+       mbs=st.sampled_from([1, 2]))
+@settings(max_examples=16, deadline=None)
+def test_engine_at_least_critical_path(pp, dp, mbs):
+    """t_iter can never beat the pipeline critical path: every microbatch's
+    fwd+bwd serializes on the straggler stage, plus one full traversal."""
+    plan, prof = _plan(pp=pp, dp=dp, mbs=mbs)
+    bd = tim.iteration_time(prof, plan, CLUSTER)
+    n_micro = plan.num_microbatches
+    per_stage = bd.per_stage_fwd_bwd
+    lower = sum(per_stage) + max(n_micro - 1, 0) * max(per_stage)
+    assert bd.t_iter >= lower * (1 - 1e-9), (bd.t_iter, lower)
+
+
+# --- hierarchical cross-zone DP sync (satellite bugfixes) --------------------
+
+def _two_zone_cluster():
+    return multi_zone({
+        "za": ("r1", {"A100-40": 64}),
+        "zb": ("r2", {"A100-40": 64}),
+    })
+
+
+def _stage_all(prof, replicas):
+    units = prof.n_partition_units
+    return StageConfig(0, units, tuple(replicas))
+
+
+def test_cross_zone_sync_uses_hierarchical_reduction():
+    """Replicas clustered 2+2 across two zones must sync faster than the
+    old flat ring over the slowest link, and slower than a pure intra-zone
+    ring (regression for the dead hierarchical_all_reduce_time path)."""
+    prof = _profile()
+    cluster = _two_zone_cluster()
+    reps = [StageReplica("A100-40", 1, "za"), StageReplica("A100-40", 1, "za"),
+            StageReplica("A100-40", 1, "zb"), StageReplica("A100-40", 1, "zb")]
+    plan = ParallelPlan((_stage_all(prof, reps),), 1, 256)
+    t = tim.sync_time(prof, plan, cluster, 0)
+    params = prof.stage_params(0, prof.n_partition_units)
+    nbytes = params * DTYPE_BYTES
+    slow = cluster.link_between("za", "zb")
+    fast = cluster.links["intra-zone"]
+    t_flat_slow = network.all_reduce_time(slow, nbytes, 4)     # old model
+    t_intra = network.all_reduce_time(fast, nbytes, 4)
+    assert t < t_flat_slow, (t, t_flat_slow)
+    assert t > t_intra, (t, t_intra)
+    # and it is exactly the two-level decomposition
+    want = network.hierarchical_all_reduce_time(fast, slow, nbytes, 2, 2)
+    assert t == pytest.approx(want)
+
+
+def test_sync_bottleneck_link_is_alpha_aware():
+    """A high-latency high-bandwidth link must be recognized as the
+    bottleneck for small payloads (1/beta ranking inverts it)."""
+    cluster = multi_zone({
+        "za": ("r1", {"A100-40": 8}),
+        "zb": ("r1", {"A100-40": 8}),
+        "zc": ("r2", {"A100-40": 8}),
+    })
+    # inter-zone: huge alpha, huge beta; inter-region: tiny alpha, lower beta
+    links = dict(cluster.links)
+    links["inter-zone"] = LinkSpec("inter-zone", alpha=1e-2, beta=2e12)
+    links["inter-region"] = LinkSpec("inter-region", alpha=1e-6, beta=1e12)
+    cluster = dataclasses.replace(cluster, links=links)
+    prof = _profile()
+    units = prof.n_partition_units
+    st_ = StageConfig(units - 1, units, (          # tiny payload (head stage)
+        StageReplica("A100-40", 1, "za"),
+        StageReplica("A100-40", 1, "zb"),
+        StageReplica("A100-40", 1, "zc")))
+    plan = ParallelPlan((StageConfig(0, units - 1,
+                                     (StageReplica("A100-40", 1, "za"),) * 3),
+                         st_), 1, 256)
+    t = tim.sync_time(prof, plan, cluster, 1)
+    # the slow phase must be priced on the 10ms-alpha inter-zone link: a
+    # 3-way ring pays 2*(k-1)*alpha = 4 alphas >= 40ms
+    assert t >= 4e-2, t
+    # the old 1/beta ranking would have picked inter-region (alpha 1us)
+    params = prof.stage_params(units - 1, units)
+    t_old = network.all_reduce_time(links["inter-region"],
+                                    params * DTYPE_BYTES, 3)
+    assert t_old < 1e-3, t_old
+
+
+def test_sync_hetero_tp_uses_per_shard_payloads():
+    """A high-TP replica behind a slow link syncs a small shard; the old
+    model paired the slowest link with the biggest payload (an impossible
+    ring) and overstated the time."""
+    prof = _profile()
+    cluster = _two_zone_cluster()
+    reps = [StageReplica("A100-40", 1, "za"), StageReplica("A100-40", 1, "za"),
+            StageReplica("A100-40", 4, "zb")]
+    plan = ParallelPlan((_stage_all(prof, reps),), 1, 256)
+    t = tim.sync_time(prof, plan, cluster, 0)
+    params = prof.stage_params(0, prof.n_partition_units)
+    slow = cluster.link_between("za", "zb")
+    t_old = network.all_reduce_time(slow, params / 1 * DTYPE_BYTES, 3)
+    assert t < t_old, (t, t_old)
+    assert t > 0.0
+
+
+def test_multi_zone_plan_end_to_end_exercises_hierarchical_sync():
+    """Acceptance: a multi-zone pipeline plan simulates end-to-end with the
+    hierarchical cross-zone sync path on its critical path."""
+    prof = _profile()
+    cluster = _two_zone_cluster()
+    units = prof.n_partition_units
+    half = units // 2
+    mk = lambda lo, hi, zs: StageConfig(
+        lo, hi, tuple(StageReplica("A100-40", 1, z) for z in zs))
+    plan = ParallelPlan((mk(0, half, ["za", "za", "zb", "zb"]),
+                         mk(half, units, ["za", "za", "zb", "zb"])),
+                        mbs=1, global_batch=256)
+    res = simulate(prof, plan, cluster)
+    assert res.valid
+    assert res.timing.source == "engine"
+    assert res.timing.t_sync > 0
+    # the same plan with every replica in one zone must sync faster
+    plan_local = ParallelPlan((mk(0, half, ["za"] * 4),
+                               mk(half, units, ["za"] * 4)),
+                              mbs=1, global_batch=256)
+    res_local = simulate(prof, plan_local, cluster)
+    assert res_local.t_iter < res.t_iter
+
+
+# --- uneven per-stage DP routing (satellite bugfix) ---------------------------
+
+def test_p2p_routing_uneven_stage_dp():
+    """Adjacent stages with unequal replica counts route through the
+    explicit sender->receiver mapping (the old code raised IndexError)."""
+    prof = _profile()
+    cluster = _two_zone_cluster()
+    units = prof.n_partition_units
+    half = units // 2
+    wide = StageConfig(0, half, tuple(
+        StageReplica("A100-40", 1, z) for z in ("za", "za", "zb", "zb")))
+    narrow = StageConfig(half, units, (StageReplica("A100-40", 1, "za"),
+                                       StageReplica("A100-40", 1, "zb")))
+    plan = ParallelPlan((wide, narrow), mbs=1, global_batch=256)
+    # closed form: no IndexError, every sender has a receiver
+    for d in range(4):
+        t = tim._p2p_time(prof, plan, cluster, 0, d)
+        assert t > 0
+    assert tim.boundary_route(plan, 0, 0) == 0
+    assert tim.boundary_route(plan, 0, 3) == 1
+    bd = tim.closed_form_iteration_time(prof, plan, cluster)
+    assert math.isfinite(bd.t_iter) and bd.t_iter > 0
+    # event engine: full per-replica simulation (no chain dedup)
+    bd_e = tim.iteration_time(prof, plan, cluster)
+    assert math.isfinite(bd_e.t_iter) and bd_e.t_iter > 0
+    # narrow stage 1 serves twice the microbatches of each wide replica:
+    # its workers are the bottleneck and must dominate the closed form
+    assert bd_e.t_iter > 0.5 * bd.t_iter
+    # and the full facade accepts the plan (validate no longer rejects
+    # uneven DP, so the planner/replanner path can rank such plans)
+    res = simulate(prof, plan, cluster)
+    assert math.isfinite(res.t_iter) and res.t_iter > 0
+
+
+def test_uneven_dp_capped_and_extrapolated():
+    """The uneven path simulates a bounded window and extends by the
+    steady-state period — cost must not scale with the global batch."""
+    prof_small = _profile(gbs=256)
+    prof_big = _profile(gbs=4096)
+    cluster = _two_zone_cluster()
+    units = prof_small.n_partition_units
+    half = units // 2
+    wide = StageConfig(0, half, tuple(
+        StageReplica("A100-40", 1, "za") for _ in range(4)))
+    narrow = StageConfig(half, units, (StageReplica("A100-40", 1, "za"),
+                                       StageReplica("A100-40", 1, "zb")))
+    small = ParallelPlan((wide, narrow), mbs=1, global_batch=256)
+    big = ParallelPlan((wide, narrow), mbs=1, global_batch=4096)
+    bd_small = tim.iteration_time(prof_small, small, cluster)
+    bd_big = tim.iteration_time(prof_big, big, cluster)
+    assert bd_big.n_tasks == bd_small.n_tasks      # same exact window
+    assert bd_big.t_iter > bd_small.t_iter * 8     # 16x the microbatches
+
+
+def test_boundary_route_fan_out():
+    prof = _profile()
+    units = prof.n_partition_units
+    half = units // 2
+    narrow = StageConfig(0, half, (StageReplica("A100-40", 1, "za"),))
+    wide = StageConfig(half, units, tuple(
+        StageReplica("A100-40", 1, "za") for _ in range(3)))
+    plan = ParallelPlan((narrow, wide), mbs=1, global_batch=256)
+    assert tim.boundary_route(plan, 0, 0) == 0   # in range, no IndexError
+    t = tim._p2p_time(_profile(), plan, _two_zone_cluster(), 0, 0)
+    assert t > 0
+
+
+# --- degenerate-profile guard (satellite bugfix) ------------------------------
+
+class _ZeroProfile(JobProfile):
+    """Degenerate calibrated profile: zero-cost stages everywhere."""
+
+    def stage_cost(self, lo, hi, gpu_type, tp, mbs):
+        return 0.0, 0.0, 0.0
+
+    def stage_params(self, lo, hi):
+        return 0
+
+    def stage_act_store(self, lo, hi, mbs):
+        return 0
+
+    def boundary_bytes(self, mbs):
+        return 0
+
+
+def test_simulate_flags_degenerate_plan_instead_of_crashing():
+    prof = _ZeroProfile(TrainJob(cfg=OPT, seq_len=2048, global_batch=256))
+    plan = homogeneous_plan("A100-40", ZONE, 1, 1, 1,
+                            prof.n_partition_units, 1, 256)
+    res = simulate(prof, plan, CLUSTER)     # must not ZeroDivisionError
+    assert res.degenerate
+    assert not res.valid
+    assert res.throughput == 0.0
+    assert res.samples_per_s == 0.0
+
+
+# --- interleaved virtual stages ----------------------------------------------
+
+def test_interleaved_schedule_reduces_bubble():
+    """Virtual stages shrink the fill/drain bubble, so with few
+    microbatches the interleaved schedule must beat plain 1F1B."""
+    plan, prof = _plan(pp=4, dp=1, mbs=8, gbs=64)   # 8 microbatches, deep pp
+    base = tim.iteration_time(prof, plan, CLUSTER)
+    inter = tim.iteration_time(
+        prof, plan, CLUSTER,
+        eng.EngineConfig(schedule="interleaved", virtual_stages=2))
+    assert inter.t_iter < base.t_iter, (inter.t_iter, base.t_iter)
+    assert inter.t_iter >= sum(base.per_stage_fwd_bwd) * 0.9
+
+
+def test_interleaved_greedy_fallback_indivisible_microbatches():
+    """M % P != 0 falls back to the greedy list scheduler and still yields
+    a finite, lower-bounded iteration time."""
+    plan, prof = _plan(pp=4, dp=1, mbs=1, gbs=6)    # 6 microbatches, P=4
+    bd = tim.iteration_time(
+        prof, plan, CLUSTER,
+        eng.EngineConfig(schedule="interleaved", virtual_stages=2))
+    assert math.isfinite(bd.t_iter)
+    assert bd.t_iter >= max(bd.per_stage_fwd_bwd) * plan.num_microbatches
+
+
+def test_interleaved_requires_uniform_dp():
+    prof = _profile()
+    units = prof.n_partition_units
+    half = units // 2
+    s0 = StageConfig(0, half, (StageReplica("A100-40", 1, ZONE),) * 2)
+    s1 = StageConfig(half, units, (StageReplica("A100-40", 1, ZONE),))
+    plan = ParallelPlan((s0, s1), 1, 256)
+    spec, _, _ = tim._engine_spec_uneven(
+        _profile(), plan, CLUSTER,
+        eng.EngineConfig(schedule="interleaved", virtual_stages=2))
+    with pytest.raises(ValueError):
+        eng.run_interleaved(spec, eng.EngineConfig(schedule="interleaved",
+                                                   virtual_stages=2))
+
+
+# --- facade stability --------------------------------------------------------
+
+def test_engine_breakdown_fields_populated():
+    plan, prof = _plan(pp=2, dp=2, mbs=2)
+    bd = tim.iteration_time(prof, plan, CLUSTER)
+    assert bd.source == "engine"
+    assert bd.n_tasks > 0
+    assert len(bd.per_stage_fwd_bwd) == 2
+    assert len(bd.p2p) == 2
+    assert bd.t_iter >= bd.t_pp
+    assert bd.t_update > 0
