@@ -16,6 +16,7 @@ MODULES = [
     ("fig10", "benchmarks.planner_geo"),              # Fig 10
     ("fig1112", "benchmarks.planner_constraints"),    # Figs 11/12
     ("fig5", "benchmarks.simulator_accuracy"),        # Figs 5/6
+    ("memory_accuracy", "benchmarks.memory_accuracy"),  # Fig 3/5a
     ("replan", "benchmarks.replan_latency"),          # §4.4 control plane
     ("roofline", "benchmarks.roofline"),              # §Roofline (dry-run)
     ("kern", "benchmarks.kernels_bench"),             # kernel microbench

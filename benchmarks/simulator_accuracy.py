@@ -1,9 +1,9 @@
-"""Figures 5/6 analog: simulator accuracy on this rig, with a CI gate.
+"""Figures 5/6 analog: simulator TIMING accuracy on this rig, with a CI
+gate.  (Memory accuracy has its own grid, calibration and gate in
+``benchmarks/memory_accuracy.py``.)
 
-Three sections:
+Two sections:
 
-* **Memory** — the simulator's per-worker peak estimate vs XLA's compiled
-  ``memory_analysis`` for a grid of (arch, mbs) single-device train steps.
 * **Single-program timing** — closed-form vs event-engine iteration-time
   prediction (calibrated cpu-host profile) against real wall-clock of the
   jitted step on CPU.  Both models see the same compute profile; the
@@ -36,7 +36,6 @@ from repro.core.cluster import single_zone
 from repro.core.planner.plan import homogeneous_plan
 from repro.core.profiler import measured
 from repro.core.profiler.analytic import JobProfile, TrainJob
-from repro.core.simulator import memory as mem_mod
 from repro.core.simulator import timing as tim
 from repro.core.simulator.simulate import simulate
 from repro.models import model as model_lib
@@ -55,10 +54,7 @@ def _reduced(arch):
     return dataclasses.replace(get_config(arch).reduced(), remat="none")
 
 
-def _single_program_section(mem_errors, closed_errs, engine_errs):
-    mem_cfg = mem_mod.MemoryModelConfig(
-        param_bytes=4, grad_bytes=4, opt_bytes=8,     # fp32 runtime
-        fragmentation=1.0, runtime_overhead=0.0)
+def _single_program_section(closed_errs, engine_errs):
     for arch in ARCHS:
         cfg = _reduced(arch)
         # calibrated cpu-host profile makes analytic == measured profiler
@@ -76,18 +72,9 @@ def _single_program_section(mem_errors, closed_errs, engine_errs):
                 seq_len=SEQ, global_batch=8, num_microbatches=nm))
             batch = {k: jnp.asarray(v) for k, v in ds.batch(0).items()}
             step = jax.jit(make_train_step(cfg, opt_cfg))
-            lowered = step.lower(params, opt_state, batch)
-            compiled = lowered.compile()
-            ma = compiled.memory_analysis()
-            actual_mem = (ma.argument_size_in_bytes + ma.output_size_in_bytes
-                          + ma.temp_size_in_bytes)
             plan = homogeneous_plan("cpu-host", cluster.zones[0].name,
                                     1, 1, 1, profile.n_partition_units,
                                     mbs, 8)
-            pred_mem = mem_mod.worker_peak_bytes(profile, plan, 0, 1,
-                                                 mem_cfg)
-            mem_err = abs(pred_mem - actual_mem) / actual_mem
-            mem_errors.append(mem_err)
             # timing
             p2, o2, _ = step(params, opt_state, batch)  # compile+warm
             jax.block_until_ready(p2)
@@ -104,8 +91,6 @@ def _single_program_section(mem_errors, closed_errs, engine_errs):
             closed_errs.append(e_c)
             engine_errs.append(e_e)
             emit(f"fig5/{arch}_mbs{mbs}", actual_t * 1e6,
-                 f"mem_pred={pred_mem/1e6:.1f}MB mem_act={actual_mem/1e6:.1f}MB "
-                 f"mem_err={mem_err*100:.1f}% "
                  f"t_act={actual_t*1e3:.1f}ms "
                  f"closed_err={e_c*100:.1f}% engine_err={e_e*100:.1f}%")
 
@@ -148,18 +133,15 @@ def _pipeline_section(closed_errs, engine_errs):
 def run(gate=None):
     if gate is None:
         gate = os.environ.get("SIM_ACCURACY_GATE", "") not in ("", "0")
-    mem_errors, closed_errs, engine_errs = [], [], []
-    _single_program_section(mem_errors, closed_errs, engine_errs)
+    closed_errs, engine_errs = [], []
+    _single_program_section(closed_errs, engine_errs)
     _pipeline_section(closed_errs, engine_errs)
     med_engine = float(np.median(engine_errs))
     med_closed = float(np.median(closed_errs))
     emit("fig5/summary", 0.0,
-         f"mem_err_mean={np.mean(mem_errors)*100:.1f}% "
          f"time_err_median engine={med_engine*100:.1f}% "
          f"closed={med_closed*100:.1f}% "
-         "(toy MB-scale: relative mem err dominated by XLA workspace "
-         "padding; production-scale memory validation = dry-run "
-         "memory_analysis, see EXPERIMENTS.md)")
+         "(memory accuracy: benchmarks/memory_accuracy.py)")
     if gate:
         budget = json.loads(BUDGET_PATH.read_text())
         ceil = budget["median_time_err_max"]

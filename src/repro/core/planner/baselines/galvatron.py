@@ -35,6 +35,7 @@ def plan(job: TrainJob, cluster: ClusterSpec) -> common.BaselineResult:
             p = homogeneous_plan(gpu, zone, pp, dp, tp,
                                  profile.n_partition_units, mbs,
                                  job.global_batch)
+            # shared measured peak-bytes kernel (remat-aware per profile)
             if not mem.plan_fits(profile, p):
                 continue
             over = 1.0 if remat == "full" else 0.75   # recompute saves bwd

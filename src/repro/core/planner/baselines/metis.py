@@ -71,7 +71,8 @@ def plan(job: TrainJob, cluster: ClusterSpec,
                         units.append(fwd + bwd)
                     est = (sum(units)
                            + (p.num_microbatches - 1) * max(units))
-                    # Metis memory check (roughly accurate)
+                    # Metis memory check (roughly accurate): routed through
+                    # the shared peak-bytes kernel like every other planner
                     if not mem.plan_fits(profile, p):
                         continue
                     scored.append((est, p))

@@ -15,6 +15,7 @@ from repro.core.planner.baselines import common
 from repro.core.planner.plan import ParallelPlan, homogeneous_plan
 from repro.core.profiler.analytic import JobProfile, TrainJob
 from repro.core.profiler.hw_specs import get_accelerator
+from repro.core.simulator import memory as mem
 
 
 def plan(job: TrainJob, cluster: ClusterSpec) -> common.BaselineResult:
@@ -41,8 +42,8 @@ def plan(job: TrainJob, cluster: ClusterSpec) -> common.BaselineResult:
                                              gpu, tp, mbs)
             units.append(fwd + bwd)
         est = sum(units) + (p.num_microbatches - 1) * max(units)
-        # memory check (Piper models memory reasonably well)
-        from repro.core.simulator import memory as mem
+        # memory check (Piper models memory reasonably well): the shared
+        # measured peak-bytes kernel, same verdict as simulate()
         if not mem.plan_fits(profile, p):
             continue
         scored.append((est, p))

@@ -37,7 +37,13 @@ def tp_options(gpu_type: str) -> List[int]:
 
 
 class TPTable:
-    """H2: min/valid TP per (P, stage split, mbs, gpu_type); cached."""
+    """H2: min/valid TP per (P, stage split, mbs, gpu_type); cached.
+
+    Routed through the shared ``stage_peak_bytes`` kernel against *usable*
+    HBM, with the schedule carried by ``mem_cfg`` — so the precompute can
+    never admit a (stage, tp) the simulator's final check rejects.  Still
+    availability-independent (the in-flight count skips the microbatch
+    cap), so it survives every replan."""
 
     def __init__(self, profile: JobProfile,
                  mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM):

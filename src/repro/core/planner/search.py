@@ -129,10 +129,19 @@ class SailorPlanner:
     def __init__(self, job: TrainJob,
                  mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM,
                  max_pp: int = 16, frontier_keep: int = 8,
-                 max_combos: int = 64, use_heuristics: bool = True):
+                 max_combos: int = 64, use_heuristics: bool = True,
+                 engine_cfg=None):
         self.job = job
         self.profile = JobProfile(job)
+        if engine_cfg is not None:
+            # feasibility (H2 precompute AND final simulate check) must be
+            # judged under the schedule candidates will be timed with —
+            # interleaving holds more in-flight activations than 1F1B.
+            mem_cfg = dataclasses.replace(
+                mem_cfg, schedule=engine_cfg.schedule,
+                virtual_stages=engine_cfg.virtual_stages)
         self.mem_cfg = mem_cfg
+        self.engine_cfg = engine_cfg
         self.tp_table = H.TPTable(self.profile, mem_cfg)
         self.max_pp = max_pp
         self.frontier_keep = frontier_keep
@@ -221,7 +230,7 @@ class SailorPlanner:
                             plan_footprint(cached).isdisjoint(changed_pools) \
                             and plan_fits(cached, cluster):
                         res = simulate(self.profile, cached, cluster,
-                                       self.mem_cfg)
+                                       self.mem_cfg, self.engine_cfg)
                         n_eval += 1
                         stats["reused"] += 1
                         if not res.valid:
@@ -286,7 +295,8 @@ class SailorPlanner:
                         continue
                     plan = _materialize(self.profile, solver.decode(part),
                                         regions, cluster, splits, mbs, d)
-                    res = simulate(self.profile, plan, cluster, self.mem_cfg)
+                    res = simulate(self.profile, plan, cluster, self.mem_cfg,
+                                   self.engine_cfg)
                     n_eval += 1
                     if not res.valid:
                         n_oom += 1

@@ -101,6 +101,35 @@ class JobProfile:
             return 2 * cfg.d_model * cfg.vocab_size
         return self._block_flops_per_token()
 
+    def _inner_width(self) -> int:
+        """Per-token units of live intermediate activations of one block.
+
+        Family-aware: residual in/out plus q/k/v heads and the active FFN
+        intermediates (MoE: only the ``top_k`` routed experts materialize
+        per token; SSM: x/z/B/C/dt projections and the conv/state stream).
+        This is what the old ``inner_mult = 12`` constant hand-waved.
+        """
+        cfg = self.cfg
+        if cfg.family in ("ssm", "hybrid"):
+            di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+            inner = 2 * cfg.d_model + 2 * di + 2 * n + h  # x,z,B,C,dt streams
+            # chunked-SSD materialization (models/mamba2.ssd_chunked): the
+            # within-chunk decay tensors (li/ldec/dec_end and their grads)
+            # are (.., Q, Q, H) = Q*H per token each, per-head fp32
+            # x/dt/y copies are H*P, and the cross-chunk states amortize
+            # to H*P*N/Q — together they dominate the projections.
+            q, p = max(cfg.ssm_chunk, 1), cfg.ssm_headdim
+            inner += 4 * q * h + 3 * h * p + 2 * h * p * cfg.ssm_state // q
+            if cfg.family == "hybrid":
+                attn = ((cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd
+                        + 3 * cfg.d_ff)
+                inner += attn // max(cfg.attn_every, 1)
+            return inner
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        f_active = (cfg.top_k * cfg.d_ff if cfg.family == "moe" else cfg.d_ff)
+        mats = 3 if cfg.ffn_act == "swiglu" else 2
+        return 2 * cfg.d_model + (h + 2 * kv) * hd + mats * f_active
+
     def _act_store_bytes(self, kind: str, mbs: int) -> int:
         cfg = self.cfg
         s = self.job.seq_len
@@ -108,9 +137,36 @@ class JobProfile:
         if self.job.remat == "full" or kind != "block":
             return boundary
         # no remat: all intermediates
-        h, kv, hd, f = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
-        inner = (2 * cfg.d_model + (h + 2 * kv) * hd + 3 * f)
-        return mbs * s * inner * DTYPE_BYTES
+        return mbs * s * self._inner_width() * DTYPE_BYTES
+
+    def _act_work_bytes(self, kind: str, mbs: int,
+                        act_bytes: int = DTYPE_BYTES) -> int:
+        """Live working set of ONE layer while it executes (fwd) or is
+        rematerialized during backward — the transient on top of the
+        *stored* activations counted by :meth:`_act_store_bytes`.
+
+        Remat-aware: under full remat one block's intermediates are
+        materialized at a time during the backward recompute; without
+        remat they are already stored, so only the gradient stream of
+        those intermediates is transiently live (same width).  The head
+        is dominated by the fp32 logits + softmax residency — vocab-wide,
+        which the old constant missed entirely.  ``act_bytes`` is the
+        activation dtype width (2 on the bf16 runtime, 4 on fp32 host
+        rigs); the logits/CE term is fp32 regardless and must NOT scale
+        with it.
+        """
+        cfg = self.cfg
+        tokens = mbs * self.job.seq_len
+        if kind == "embed":
+            return tokens * cfg.d_model * act_bytes
+        if kind == "head":
+            # fp32 logits and their gradient live simultaneously in the CE
+            # backward (chunked-CE reduces this; modeled unchunked).
+            chunk = cfg.logits_chunk or self.job.seq_len
+            frac = min(chunk / self.job.seq_len, 1.0)
+            return int(2 * tokens * frac * cfg.vocab_size * GRAD_BYTES
+                       + tokens * cfg.d_model * act_bytes)
+        return tokens * self._inner_width() * act_bytes
 
     # --- the profile entry ------------------------------------------------------
     @functools.lru_cache(maxsize=100_000)
@@ -164,6 +220,16 @@ class JobProfile:
         kinds = self.layer_kinds()
         return sum(self._act_store_bytes(k, mbs)
                    for k in kinds[layer_lo:layer_hi])
+
+    def stage_act_work(self, layer_lo: int, layer_hi: int, mbs: int,
+                       act_bytes: int = DTYPE_BYTES) -> int:
+        """Peak transient working set of the stage: one layer executes (or
+        rematerializes) at a time, so the stage-wide peak is the widest
+        layer in the range, not the sum.  Absolute bytes at ``act_bytes``
+        activation width (the fp32 CE term does not scale with it)."""
+        kinds = self.layer_kinds()
+        return max((self._act_work_bytes(k, mbs, act_bytes)
+                    for k in kinds[layer_lo:layer_hi]), default=0)
 
     def boundary_bytes(self, mbs: int) -> int:
         return mbs * self.job.seq_len * self.cfg.d_model * DTYPE_BYTES

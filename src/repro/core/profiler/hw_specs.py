@@ -31,10 +31,20 @@ class AcceleratorSpec:
     # Sustained-efficiency knob: fraction of peak a well-tuned kernel reaches.
     # The analytic profiler multiplies peak by this (MFU-style derate).
     efficiency: float = 0.45
+    # Fraction of HBM the runtime reserves before user allocations: CUDA
+    # context + NCCL buffers on GPUs, TFRT/ICI scratch on TPUs.  The memory
+    # model gates feasibility on ``usable_mem_bytes``, not raw capacity —
+    # a plan sized to 100% of HBM OOMs in practice.
+    reserved_mem_fraction: float = 0.06
 
     @property
     def price_per_sec(self) -> float:
         return self.price_per_hour / 3600.0
+
+    @property
+    def usable_mem_bytes(self) -> float:
+        """HBM actually available to the training program."""
+        return self.mem_bytes * (1.0 - self.reserved_mem_fraction)
 
 
 # --- catalog -----------------------------------------------------------------
@@ -44,11 +54,13 @@ ACCELERATORS: Dict[str, AcceleratorSpec] = {
     "tpu-v5e": AcceleratorSpec(
         name="tpu-v5e", peak_flops=197e12, mem_bytes=16e9, mem_bw=819e9,
         intra_node_bw=4 * 50e9,  # 4 ICI links x ~50 GB/s
-        price_per_hour=1.20, chips_per_node=4, efficiency=0.55),
+        price_per_hour=1.20, chips_per_node=4, efficiency=0.55,
+        reserved_mem_fraction=0.08),   # TFRT + ICI scratch
     "tpu-v5p": AcceleratorSpec(
         name="tpu-v5p", peak_flops=459e12, mem_bytes=95e9, mem_bw=2765e9,
         intra_node_bw=6 * 100e9,
-        price_per_hour=4.20, chips_per_node=4, efficiency=0.55),
+        price_per_hour=4.20, chips_per_node=4, efficiency=0.55,
+        reserved_mem_fraction=0.08),
     # Paper hardware.
     "A100-40": AcceleratorSpec(
         name="A100-40", peak_flops=312e12, mem_bytes=40e9, mem_bw=1555e9,
@@ -75,10 +87,12 @@ ACCELERATORS: Dict[str, AcceleratorSpec] = {
         intra_node_bw=32e9, price_per_hour=0.60, chips_per_node=8,
         efficiency=0.35),
     # Calibrated against this container in core/profiler/measured.py.
+    # No reservation: host RAM has no resident driver/runtime carve-out,
+    # and memory calibration fits against it directly.
     "cpu-host": AcceleratorSpec(
         name="cpu-host", peak_flops=50e9, mem_bytes=8e9, mem_bw=10e9,
         intra_node_bw=10e9, price_per_hour=0.10, chips_per_node=1,
-        efficiency=1.0),
+        efficiency=1.0, reserved_mem_fraction=0.0),
 }
 
 # --- roofline constants for the dry-run target (task spec) -------------------

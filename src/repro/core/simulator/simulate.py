@@ -52,6 +52,14 @@ def simulate(profile: JobProfile, plan: ParallelPlan,
              mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM,
              engine_cfg: Optional[eng.EngineConfig] = None) -> SimResult:
     plan.validate()
+    if engine_cfg is not None and \
+            (engine_cfg.schedule, engine_cfg.virtual_stages) != \
+            (mem_cfg.schedule, mem_cfg.virtual_stages):
+        # memory feasibility must be judged under the schedule being timed:
+        # interleaving holds more in-flight activations than 1F1B.
+        mem_cfg = dataclasses.replace(
+            mem_cfg, schedule=engine_cfg.schedule,
+            virtual_stages=engine_cfg.virtual_stages)
     mem = mem_mod.plan_memory(profile, plan, mem_cfg)
     valid = all(r["ok"] for row in mem for r in row)
     t = time_mod.iteration_time(profile, plan, cluster, engine_cfg)

@@ -96,6 +96,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t_lower = time.perf_counter()
             compiled = lowered.compile()
             t_compile = time.perf_counter()
+        from repro.core.profiler.measured import xla_peak_bytes
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
         if isinstance(cost, (list, tuple)):     # older jax: list of dicts
@@ -108,9 +109,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         n_chips = int(len(mesh.devices.reshape(-1)))
         flops_dev = scaled.flops
         bytes_dev = scaled.bytes_accessed
-        per_dev_mem = (mem.argument_size_in_bytes + mem.output_size_in_bytes
-                       + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
-        # roofline terms (per device == per chip; see DESIGN.md §7)
+        per_dev_mem = xla_peak_bytes(compiled)
+        # roofline terms (per device == per chip; see DESIGN.md §8)
         t_comp = flops_dev / PEAK_FLOPS
         t_mem = bytes_dev / HBM_BW
         t_coll = scaled.collective_traffic / ICI_BW

@@ -50,7 +50,7 @@ def num_microbatches(cfg: ModelConfig, shape: ShapeConfig,
         return shape.num_microbatches
     dp = int(np.prod([mesh.shape[a] for a in shd.dp_axes(mesh)]))
     # keep per-shard microbatch tokens ~<= 8k so remat'd activations of the
-    # widest archs stay inside 16 GB (see DESIGN.md §8)
+    # widest archs stay inside 16 GB (see DESIGN.md §9)
     per_shard = shape.global_batch // max(dp, 1)
     target_seqs = max(1, 8192 // shape.seq_len)
     nm = 1

@@ -215,8 +215,12 @@ class IncrementalReplanner:
             if rehomed is None:
                 continue
             tried += 1
+            # same memory model + engine schedule as the planner's own
+            # evaluations, so a repaired incumbent's feasibility verdict
+            # (schedule-aware in-flight counts, usable-HBM gate) can never
+            # disagree with the search it seeds.
             res = simulate(self.planner.profile, rehomed, cluster,
-                           self.planner.mem_cfg)
+                           self.planner.mem_cfg, self.planner.engine_cfg)
             if res.valid and obj.satisfies(res) and \
                     (best is None or obj.better(best, res)):
                 best = res

@@ -36,7 +36,9 @@ def grow_cache(cache: Dict[str, jax.Array],
 
 
 def cache_bytes(cache: Dict[str, jax.Array]) -> int:
-    """Total bytes held by a cache pytree (tests: SSM decode is O(1))."""
-    import numpy as np
-    return sum(np.asarray(jax.device_get(v)).nbytes
-               for v in jax.tree_util.tree_leaves(cache))
+    """Total bytes held by a cache pytree (tests: SSM decode is O(1)).
+
+    Metadata-only: ``nbytes`` comes from shape x dtype, so the serving
+    path never pays a device->host copy of the whole KV cache just to
+    report its size (the old ``jax.device_get`` round-trip)."""
+    return sum(int(v.nbytes) for v in jax.tree_util.tree_leaves(cache))

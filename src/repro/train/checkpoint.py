@@ -51,12 +51,37 @@ def _unflatten(template: Any, flat: Dict[str, np.ndarray]) -> Any:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 orphan_ttl_s: float = 3600.0):
         self.dir = directory
         self.keep = keep
+        self.orphan_ttl_s = orphan_ttl_s
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._sweep_orphans()
+
+    def _sweep_orphans(self) -> None:
+        """Remove ``tmp-<step>`` dirs left by a crash mid-write.
+
+        A tmp dir only exists between the start of a write and its rename
+        into place, so an old one is a torn write that would otherwise
+        accumulate forever.  Only dirs older than ``orphan_ttl_s`` are
+        swept: a freshly-modified tmp dir may belong to a live writer in
+        *another* process (elastic failover starting a replacement trainer
+        while the old one's background save is still running)."""
+        import time
+        now = time.time()
+        for name in os.listdir(self.dir):
+            if not name.startswith("tmp-"):
+                continue
+            path = os.path.join(self.dir, name)
+            try:
+                age = now - os.path.getmtime(path)
+            except OSError:
+                continue                  # raced with its own rename
+            if age >= self.orphan_ttl_s:
+                shutil.rmtree(path, ignore_errors=True)
 
     # --- save ------------------------------------------------------------------
     def save(self, step: int, state: Any, blocking: bool = False) -> None:
@@ -107,8 +132,13 @@ class CheckpointManager:
     def steps(self) -> List[int]:
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step-"):
-                out.append(int(name.split("-", 1)[1]))
+            if not name.startswith("step-"):
+                continue
+            suffix = name.split("-", 1)[1]
+            # foreign entries (editor droppings, "step-backup", ...) must
+            # not take down every restore in the directory
+            if suffix.isdigit():
+                out.append(int(suffix))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:

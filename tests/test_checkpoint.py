@@ -74,3 +74,36 @@ def test_missing_checkpoint_raises(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     with pytest.raises(FileNotFoundError):
         mgr.restore(_state())
+
+
+def test_orphaned_tmp_dirs_swept_on_init(tmp_path):
+    """A crash mid-write leaves tmp-<step>; a new manager must clean it."""
+    orphan = tmp_path / "tmp-7"
+    orphan.mkdir()
+    (orphan / "state.npz").write_bytes(b"torn")
+    keep = tmp_path / "step-3"
+    keep.mkdir()
+    mgr = CheckpointManager(str(tmp_path), orphan_ttl_s=0.0)
+    assert not orphan.exists()
+    assert keep.exists()                 # completed checkpoints untouched
+    assert mgr.steps() == [3]
+
+
+def test_fresh_tmp_dir_survives_init(tmp_path):
+    """A recent tmp dir may be a live writer from another process — the
+    default TTL must leave it alone."""
+    live = tmp_path / "tmp-9"
+    live.mkdir()
+    CheckpointManager(str(tmp_path))     # default orphan_ttl_s
+    assert live.exists()
+
+
+def test_steps_skips_unparsable_entries(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _state(), blocking=True)
+    (tmp_path / "step-backup").mkdir()   # foreign dir must not raise
+    (tmp_path / "step-old.bak").mkdir()
+    assert mgr.steps() == [5]
+    assert mgr.latest_step() == 5
+    _, step = mgr.restore(_state())      # restore still works around them
+    assert step == 5

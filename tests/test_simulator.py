@@ -51,14 +51,20 @@ def test_memory_first_stage_holds_most_activations():
 
 def test_oom_detection_on_v100():
     """GPT-Neo-2.7B (37GB training state) must NOT fit a 16GB V100 at
-    pp=1/tp=1 — while OPT-350M (~7GB) must."""
+    pp=1/tp=1 — while OPT-350M (~7GB state) at mbs=4 must.  mbs=8 is
+    pinned as rejected: the measured model accounts for the fp32
+    logits + logit-grad residency of the unchunked CE backward
+    (~6.6GB at mbs=8 x 2048 x 50k vocab), which the old ``inner_mult``
+    heuristic missed entirely."""
     neo = get_config("gpt-neo-2.7b")
     prof = JobProfile(TrainJob(cfg=neo, seq_len=2048, global_batch=256))
     plan = homogeneous_plan("V100-16", "us-central1-a", 1, 1, 1,
                             prof.n_partition_units, 8, 256)
     assert not mem.plan_fits(prof, plan)
-    plan_small, prof_small = _plan(pp=1, dp=1, tp=1, mbs=8, gpu="V100-16")
+    plan_small, prof_small = _plan(pp=1, dp=1, tp=1, mbs=4, gpu="V100-16")
     assert mem.plan_fits(prof_small, plan_small)
+    plan_big, prof_big = _plan(pp=1, dp=1, tp=1, mbs=8, gpu="V100-16")
+    assert not mem.plan_fits(prof_big, plan_big)
 
 
 def test_memory_includes_optimizer_copies():
