@@ -10,7 +10,8 @@ import time
 import traceback
 
 MODULES = [
-    ("search_time", "benchmarks.search_time"),        # Tables 1-3, §5.3
+    ("search_time", "benchmarks.search_time"),        # Tables 1-3, §5.3 +
+    #  geo-scale grid (SEARCH_TIME_GATE=1 enforces accuracy_budget.json)
     ("fig7", "benchmarks.planner_homog"),             # Fig 7
     ("fig89", "benchmarks.planner_hetero"),           # Figs 8/9
     ("fig10", "benchmarks.planner_geo"),              # Fig 10
@@ -38,7 +39,10 @@ def main() -> None:
         try:
             mod = __import__(modname, fromlist=["run"])
             mod.run()
-        except Exception as e:
+        except (Exception, SystemExit) as e:
+            # SystemExit included: a gated module (e.g. search_time under
+            # SEARCH_TIME_GATE) failing its budget must not abort the
+            # remaining modules — it is recorded and re-raised at the end.
             failed.append(key)
             print(f"{key}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)

@@ -1,16 +1,63 @@
-"""Tables 1-3: planner search times + optimization breakdown."""
+"""Tables 1-3: planner search times + optimization breakdown, plus the
+geo-scale grid (512 -> 2048 chips, 2-6 regions, 3-4 GPU types, dense + MoE).
+
+Gate (CI): ``SEARCH_TIME_GATE=1`` enforces the per-grid search-time budgets
+in ``benchmarks/accuracy_budget.json`` and additionally times the
+*pre-refactor proxy* on the 1024-chip/4-region grid — the planner run with
+the two-phase frontier disabled (simulate every DP survivor), shared
+cross-candidate tables off, and no est-frontier pruning bounds, i.e. the
+cost profile of the old outer loop — asserting the rebuilt search is at
+least ``search_speedup_min`` times faster while returning a plan at least
+as good.
+"""
+import json
+import os
+import pathlib
+
 from repro.configs import get_config
-from repro.core.cluster import heterogeneous_zone, single_zone
+from repro.core.cluster import heterogeneous_zone, multi_zone, single_zone
 from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
 from repro.core.planner.search import SailorPlanner, plan_for
 from repro.core.profiler.analytic import TrainJob
 
 from benchmarks.common import emit, fmt_best
 
+BUDGET = json.loads(
+    (pathlib.Path(__file__).parent / "accuracy_budget.json").read_text())
+
+
+def _geo_cluster(n_regions, zones_per_region, per_zone):
+    zones = {}
+    for r in range(n_regions):
+        for z in range(zones_per_region):
+            zones[f"r{r}-{chr(97 + z)}"] = (f"region-{r}", dict(per_zone))
+    return multi_zone(zones)
+
+
+# name -> (config, seq, gbs, cluster); chips = regions * zones * per-zone
+SCALE_GRID = {
+    "scale/512c_2r_3t_dense": (
+        "gpt-neo-2.7b", 2048, 2048,
+        _geo_cluster(2, 2, {"A100-40": 64, "V100-16": 48, "GH200": 16})),
+    "scale/1024c_4r_3t_dense": (
+        "gpt-neo-2.7b", 2048, 2048,
+        _geo_cluster(4, 2, {"A100-40": 64, "V100-16": 48, "GH200": 16})),
+    "scale/2048c_6r_4t_dense": (
+        "gpt-neo-2.7b", 2048, 4096,
+        _geo_cluster(6, 2, {"A100-40": 48, "V100-16": 40, "GH200": 24,
+                            "RTX-3090": 16})),
+    "scale/1024c_2r_2t_moe": (
+        "mixtral-8x22b", 4096, 1024,
+        _geo_cluster(2, 1, {"GH200": 384, "A100-40": 128})),
+}
+SPEEDUP_GRID = "scale/1024c_4r_3t_dense"
+
 
 def run():
     opt = get_config("opt-350m")
     neo = get_config("gpt-neo-2.7b")
+    gate = os.environ.get("SEARCH_TIME_GATE") == "1"
+    failures = []
 
     # --- Table 1: 128 A100, OPT-350M ---
     res = plan_for(opt, single_zone("A100-40", 128),
@@ -37,13 +84,23 @@ def run():
         cl, Objective(MAX_THROUGHPUT))
     emit("table3/heuristics_off_maxpp6", res_off.search_time_s * 1e6,
          fmt_best(res_off.best))
+    # two-phase frontier invariant on the paper grid: simulating only the
+    # top-K survivors must not lose the exhaustive winner (enforced under
+    # the gate; always emitted for visibility)
+    if res_off.best is not None and res.best is not None \
+            and res.best.t_iter > res_off.best.t_iter * (1 + 1e-9):
+        emit("table3/frontier_dropped_optimum",
+             (res.best.t_iter - res_off.best.t_iter) * 1e6, "seconds lost")
+        if gate:
+            failures.append(
+                f"frontier dropped the optimum on table3: "
+                f"{res.best.t_iter} > {res_off.best.t_iter}")
     res_b = SailorPlanner(job).plan(
         cl, Objective(MAX_THROUGHPUT, max_cost_per_iter=1.5))
     emit("table3/with_budget_1.5", res_b.search_time_s * 1e6,
          fmt_best(res_b.best))
 
     # scalability vs zones (paper §5.3)
-    from repro.core.cluster import multi_zone
     for nz in (1, 3, 5):
         zones = {f"us-central1-{chr(97 + i)}":
                  ("us-central1", {"A100-40": 256}) for i in range(nz)}
@@ -51,3 +108,74 @@ def run():
                        2048, 2048)
         emit(f"scale/zones_{nz}x256_gptneo", res.search_time_s * 1e6,
              fmt_best(res.best))
+
+    # --- geo-scale grid (budget-gated) ---
+    budget_s = BUDGET.get("search_time_budget_s", {})
+    speedup_min = BUDGET.get("search_speedup_min", 5.0)
+    for name, (cfg_name, seq, gbs, cluster) in SCALE_GRID.items():
+        res = plan_for(get_config(cfg_name), cluster,
+                       Objective(MAX_THROUGHPUT), seq, gbs)
+        emit(name, res.search_time_s * 1e6, fmt_best(res.best))
+        cap = budget_s.get(name)
+        if gate and cap is not None and res.search_time_s > cap:
+            failures.append(
+                f"{name}: search took {res.search_time_s:.1f}s "
+                f"> budget {cap:.1f}s")
+        if name == SPEEDUP_GRID:
+            frontier_res = res
+
+    if gate:
+        # pre-refactor proxy on the 1024-chip/4-region grid: simulate every
+        # DP survivor, rebuild per-candidate tables, no frontier bounds,
+        # and no per-level state beam (the old solver had none — only a
+        # 200k-state safety valve; the seed implementation timed out past
+        # 120s on this grid).  The proxy is time-boxed at
+        # 2 * speedup_min * frontier time: if it is still running when the
+        # alarm fires, the required speedup holds by construction and CI
+        # does not pay the proxy's full (unbounded) runtime.
+        import signal
+
+        cfg_name, seq, gbs, cluster = SCALE_GRID[SPEEDUP_GRID]
+        cap_s = max(2.0 * speedup_min * frontier_res.search_time_s, 60.0)
+
+        class _ProxyTimeout(Exception):
+            pass
+
+        def _on_alarm(signum, frame):
+            raise _ProxyTimeout()
+
+        old_handler = signal.signal(signal.SIGALRM, _on_alarm)
+        signal.alarm(int(cap_s))
+        legacy = None
+        try:
+            legacy = plan_for(get_config(cfg_name), cluster,
+                              Objective(MAX_THROUGHPUT), seq, gbs,
+                              sim_top_k=None, share_tables=False,
+                              state_beam=10 ** 9)
+            legacy_s = legacy.search_time_s
+        except _ProxyTimeout:
+            legacy_s = cap_s
+        finally:
+            signal.alarm(0)
+            signal.signal(signal.SIGALRM, old_handler)
+        emit("scale/1024c_4r_3t_dense_legacy_proxy", legacy_s * 1e6,
+             fmt_best(legacy.best) if legacy is not None
+             else f"timed out at {cap_s:.0f}s")
+        speedup = legacy_s / max(frontier_res.search_time_s, 1e-9)
+        emit("scale/1024c_speedup_vs_legacy", speedup,
+             ("x" if legacy is not None else "x (lower bound, proxy cut)"))
+        if speedup < speedup_min:
+            failures.append(
+                f"speedup {speedup:.1f}x < required {speedup_min:.1f}x")
+        if legacy is not None and legacy.best is not None \
+                and frontier_res.best is not None and \
+                frontier_res.best.t_iter > legacy.best.t_iter * (1 + 1e-9):
+            failures.append(
+                "frontier search returned a worse plan than the "
+                f"exhaustive proxy: {frontier_res.best.t_iter} vs "
+                f"{legacy.best.t_iter}")
+    if failures:
+        raise SystemExit("search-time gate FAILED:\n  "
+                         + "\n  ".join(failures))
+    if gate:
+        print("# search-time gate OK", flush=True)

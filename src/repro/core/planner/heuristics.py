@@ -20,7 +20,7 @@ import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cluster import ClusterSpec
-from repro.core.profiler.analytic import JobProfile
+from repro.core.profiler.analytic import DTYPE_BYTES, JobProfile
 from repro.core.profiler.hw_specs import get_accelerator
 from repro.core.simulator import memory as mem_mod
 
@@ -78,9 +78,26 @@ def region_pools(cluster: ClusterSpec) -> Tuple[List[str], List[Dict[str, int]]]
 
 def dp_candidates(global_batch: int, mbs: int, max_d: int,
                   decreasing: bool) -> List[int]:
-    """H3/H4: feasible D values ordered per objective."""
-    out = [d for d in range(1, max_d + 1)
-           if global_batch % (d * mbs) == 0]
+    """H3/H4: feasible D values ordered per objective.
+
+    ``d * mbs`` must divide ``global_batch``, i.e. ``d`` divides
+    ``global_batch // mbs`` — enumerated as divisors in O(sqrt) instead of
+    scanning ``1..max_d`` (the scan made the outer loop O(global_batch)
+    per (pp, mbs) group at large batch sizes)."""
+    if mbs <= 0 or global_batch % mbs:
+        return []                # d * mbs can never divide global_batch
+    q = global_batch // mbs
+    lim = min(max_d, q)
+    out = []
+    i = 1
+    while i * i <= q:
+        if q % i == 0:
+            if i <= lim:
+                out.append(i)
+            j = q // i
+            if j != i and j <= lim:
+                out.append(j)
+        i += 1
     return sorted(out, reverse=decreasing)
 
 
@@ -102,13 +119,33 @@ def pp_candidates(n_layers: int, total_chips: int,
     return [p for p in cands if p <= lim]
 
 
+# Canonical machine balance (bf16 FLOPs per HBM byte) used to weigh
+# bytes-bound layers (the embedding gather has ~zero FLOPs but real memory
+# traffic) against compute-bound ones in ``balanced_split``.  A fixed
+# constant in the middle of the accelerator catalog's balance range — NOT a
+# lookup into the catalog, so removing any spec cannot crash the split, and
+# GPU-only jobs are no longer weighted by one specific accelerator's
+# roofline.  Splits depend only on *relative* layer weights, so any balance
+# in the catalog's band yields near-identical cuts (pinned by test).
+CANONICAL_FLOPS_PER_BYTE = 132.3
+
+
 def balanced_split(profile: JobProfile, pp: int) -> List[Tuple[int, int]]:
     """Split the unrolled layer sequence into pp contiguous ranges with
-    near-equal compute (embed/head get folded into first/last stages)."""
+    near-equal compute (embed/head get folded into first/last stages).
+
+    Layer weight is a machine-free roofline at a reference microbatch of
+    one: ``max(flops, CANONICAL_FLOPS_PER_BYTE * bytes_moved)``."""
     kinds = profile.layer_kinds()
+    cfg = profile.cfg
+    tokens = profile.job.seq_len         # mbs = 1 reference microbatch
     n = len(kinds)
-    ref_gpu = "tpu-v5e"
-    w = [max(profile.cost(k, ref_gpu, 1, 1).fwd, 1e-12) for k in kinds]
+    w = []
+    for k in kinds:
+        flops = profile._layer_flops_per_token(k) * tokens
+        bytes_moved = (profile._layer_params(k) * DTYPE_BYTES
+                       + 2 * tokens * cfg.d_model * DTYPE_BYTES)
+        w.append(max(flops, CANONICAL_FLOPS_PER_BYTE * bytes_moved, 1e-12))
     total = sum(w)
     bounds = [0]
     acc = 0.0

@@ -1,19 +1,59 @@
 """Sailor planner: outer search loop (paper §4.2).
 
-Iterates pipeline degree x layer split x microbatch size x data-parallel
-degree (ordered per H3/H4), invokes the DP solver per candidate, evaluates
-survivors with the full simulator, and returns the best plan for the
-objective under constraints — in seconds, for hundreds of chips.
+Two-phase candidate-frontier search:
+
+* **Phase 1 — enumerate + DP-rank.**  (pp, mbs, d) candidates are walked in
+  a deterministic order (pp ascending, mbs ascending, d per H3/H4), each
+  solved with the DP solver against a **cross-candidate memo**
+  (``dp_solver.CandidateMemo``: per-(pp, split) pseudo-type tables, stage
+  parameter counts and link constants are computed once and shared across
+  every mbs/d — and across warm replans).  Survivors carry the DP's own
+  ``est_time``/``est_cost``.
+* **Phase 2 — simulate a top-K frontier.**  Survivors (DP solutions and
+  warm-reuse candidates, ranked together — reuse entries by their previous
+  simulated score) are walked in rank order and only the ``sim_top_k``
+  best pay the event-driven ``simulate()``; the walk extends past K until
+  a constraint-satisfying plan is found, and if the whole frontier comes
+  back invalid the search re-runs exhaustively, so an OOM-heavy frontier
+  degrades to the old simulate-everything scan instead of returning
+  nothing.  Candidates past the cut are still materialized into the
+  result's candidate pool with their (flagged) DP estimates — warm
+  replans repair incumbents and reuse candidates from that pool.  With
+  ``use_heuristics=False`` (or ``sim_top_k=None``) every survivor is
+  simulated — the exhaustive reference the frontier invariant is pinned
+  against in ``tests/test_planner.py``.
+
+Pruning bounds are est-to-est and therefore exact w.r.t. frontier
+membership: once the frontier holds K survivors, a candidate whose
+capacity-free lower bound exceeds the K-th best estimate cannot enter the
+frontier.  Bounds derived from a *simulated* incumbent keep a x1.1 slack
+(the simulator's extra terms).  An ``incumbent`` passed in must prove (via
+``SimResult.cluster_fp``) that it was simulated against *this* cluster, or
+it is re-simulated (rehomed if needed) before it may seed any bound — a
+SimResult produced on a different cluster/price-book says nothing about
+this one.
+
+H3/H4 early exit (within one (pp, mbs) group, ``use_heuristics=True``):
+the d-walk stops when a candidate's DP estimate is strictly worse than the
+best estimate seen in the group; plateaus (equal estimates) continue, and
+invalid candidates — lb-pruned, capacity-infeasible, or DP-empty — neither
+update the group best nor stop the walk.  Warm-reuse candidates skip the DP
+entirely and do not participate (fresh and reuse paths see the same walk).
+
+See DESIGN.md §10 for the full design (frontier invariant, pruning-bound
+soundness, slowest-last materialization).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.cluster import ClusterSpec
 from repro.core.planner import heuristics as H
-from repro.core.planner.dp_solver import DPSolver, Partial, StageChoice
+from repro.core.planner.dp_solver import (CandidateMemo, DPSolver,
+                                          StageChoice)
 from repro.core.planner.objectives import (MAX_THROUGHPUT, MIN_COST,
                                            Objective)
 from repro.core.planner.plan import (ParallelPlan, StageConfig, StageReplica)
@@ -119,10 +159,37 @@ def _materialize(profile: JobProfile, choices: List[StageChoice],
                     zone_used[(z.name, gpu_type)] = \
                         zone_used.get((z.name, gpu_type), 0) + tp
                     reps.append(StageReplica(gpu_type, tp, z.name))
-        # order replicas slowest-last for deterministic p2p pairing
+        # Slowest-last replica ordering: replica i of this stage pairs with
+        # replica i of the next (timing._chain_replicas / boundary_route),
+        # so sorting every stage fastest-first aligns fast chains with fast
+        # chains and slow with slow — the pairing the engine's straggler
+        # model is calibrated on.  Lexicographic gpu_type order (the old
+        # behavior) paired replicas by type *name*, which for heterogeneous
+        # stages mixed fast and slow workers into every chain.
+        speed: Dict[Tuple[str, int], float] = {}
+        for r in reps:
+            if (r.gpu_type, r.tp) not in speed:
+                f, b, _ = profile.stage_cost(lo, hi, r.gpu_type, r.tp, mbs)
+                speed[(r.gpu_type, r.tp)] = f + b
+        reps.sort(key=lambda r: (speed[(r.gpu_type, r.tp)],
+                                 r.gpu_type, r.tp, r.zone))
         stages.append(StageConfig(lo, hi, tuple(reps)))
     return ParallelPlan(stages=tuple(stages), mbs=mbs,
                         global_batch=profile.job.global_batch)
+
+
+@dataclasses.dataclass
+class _Candidate:
+    """Phase-1 survivor: a DP solution (or warm-reuse plan) awaiting
+    simulation, ranked by its estimate."""
+    seq: int                            # deterministic enumeration index
+    key3: Tuple[int, int, int]          # (pp, mbs, d)
+    est_time: float
+    est_cost: float
+    choices: Optional[List[StageChoice]]    # DP survivors
+    splits: Optional[List[Tuple[int, int]]]
+    plan: Optional[ParallelPlan] = None     # warm-reuse candidates
+    reused: bool = False
 
 
 class SailorPlanner:
@@ -130,7 +197,10 @@ class SailorPlanner:
                  mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM,
                  max_pp: int = 16, frontier_keep: int = 8,
                  max_combos: int = 64, use_heuristics: bool = True,
-                 engine_cfg=None):
+                 engine_cfg=None, sim_top_k: Optional[int] = 12,
+                 memo: Optional[CandidateMemo] = None,
+                 share_tables: bool = True, state_beam: int = 512,
+                 pool_slack: float = 1.0):
         self.job = job
         self.profile = JobProfile(job)
         if engine_cfg is not None:
@@ -147,11 +217,30 @@ class SailorPlanner:
         self.frontier_keep = frontier_keep
         self.max_combos = max_combos
         self.use_heuristics = use_heuristics
+        self.sim_top_k = sim_top_k
+        self.state_beam = state_beam
+        # the est-frontier bound is exact for *this* search, but pruning
+        # everything beyond it leaves the warm-replan candidate pool
+        # holding only capacity-maximal plans (useless after a shrink):
+        # with pool_slack > 1, candidates within that factor of the
+        # frontier/incumbent bounds are still DP-solved and materialized
+        # into stats["plans"], just never simulated.  Cold/one-shot
+        # searches keep the default 1.0 (exact pruning, fastest);
+        # ``manager.replan.IncrementalReplanner`` — whose pool feeds
+        # incumbent repair, certification and candidate reuse — widens it.
+        self.pool_slack = pool_slack
+        # cross-candidate memo: shared by every DP solve of every plan()
+        # call on this planner (warm replans inherit it via the long-lived
+        # planner held by manager.replan.IncrementalReplanner).
+        self.memo = memo if memo is not None \
+            else CandidateMemo(self.profile, enabled=share_tables)
+        self._tp_sel_cache: Dict = {}
 
     # -------------------------------------------------------------------------
     def plan(self, cluster: ClusterSpec, objective: Objective, *,
              incumbent: Optional[SimResult] = None,
              reuse: Optional[Dict[Tuple[int, int, int], ParallelPlan]] = None,
+             reuse_scores: Optional[Dict[Tuple[int, int, int], float]] = None,
              changed_pools: Optional[frozenset] = None,
              pp_allow: Optional[frozenset] = None,
              mbs_allow: Optional[frozenset] = None) -> PlanResult:
@@ -159,16 +248,27 @@ class SailorPlanner:
 
         Warm-start hooks (used by ``repro.manager.replan``):
 
-        * ``incumbent`` — a SimResult already simulated on *this* cluster
-          that satisfies the objective.  It seeds ``best``, so the
-          incumbent-driven budget/time bounds prune from candidate #1.
+        * ``incumbent`` — a SimResult from a previous search.  Unless its
+          ``cluster_fp`` proves it was simulated against *this* cluster
+          (capacity and prices are both in the fingerprint), its plan is
+          re-simulated here (rehomed first if its exact zone placement no
+          longer fits) before it may seed ``best`` — a result simulated
+          against a different capacity/price-book must never drive the
+          pruning bounds, it could silently suppress the true optimum.  A
+          stale incumbent that no longer fits or no longer satisfies the
+          objective is dropped (``stats["incumbent_dropped"]``).
         * ``reuse`` — ``{(pp, mbs, d): plan}`` materialized winners from a
           previous search.  When a candidate's cached plan has a resource
           footprint disjoint from ``changed_pools`` (the (zone, type) pools
           whose capacity shrank since that search), shrinking elsewhere only
           removed options the plan never used — the cached plan is still
-          that candidate's optimum and the DP solve is skipped, leaving
-          only a cheap re-simulation (which also picks up price changes).
+          that candidate's optimum and the DP solve is skipped: the
+          candidate enters the phase-2 frontier directly, where the top-K
+          get re-simulated and the rest carry their cached score forward
+          (still exact under the reuse preconditions — capacity never
+          enters ``simulate()``).  ``reuse_scores`` (the previous search's
+          ``stats["scores"]``) ranks reused candidates in the frontier;
+          without it they sort ahead of DP survivors.
           Callers must not pass ``reuse`` when any pool *grew*: new
           capacity could beat any cached solution.
         * ``pp_allow`` / ``mbs_allow`` — restrict the outer search to these
@@ -178,22 +278,102 @@ class SailorPlanner:
           falls back to an unrestricted search when the restricted one
           finds nothing).
         """
+        result = self._search(cluster, objective, incumbent=incumbent,
+                              reuse=reuse, reuse_scores=reuse_scores,
+                              changed_pools=changed_pools,
+                              pp_allow=pp_allow, mbs_allow=mbs_allow)
+        if result.best is None and self.use_heuristics \
+                and self.sim_top_k is not None:
+            # the top-K frontier found nothing valid (e.g. every survivor
+            # OOMed in simulation while the est-frontier bounds pruned the
+            # slower-but-feasible candidates away): degrade to the
+            # exhaustive scan, as the old loop would have.
+            t0 = time.perf_counter()
+            fb = self._search(cluster, objective, incumbent=incumbent,
+                              reuse=reuse, reuse_scores=reuse_scores,
+                              changed_pools=changed_pools,
+                              pp_allow=pp_allow, mbs_allow=mbs_allow,
+                              exhaustive=True)
+            return dataclasses.replace(
+                fb,
+                search_time_s=result.search_time_s
+                + (time.perf_counter() - t0),
+                stats={**fb.stats, "frontier_fallback": True})
+        return result
+
+    def _search(self, cluster: ClusterSpec, objective: Objective, *,
+                incumbent: Optional[SimResult] = None,
+                reuse=None, reuse_scores=None,
+                changed_pools: Optional[frozenset] = None,
+                pp_allow: Optional[frozenset] = None,
+                mbs_allow: Optional[frozenset] = None,
+                exhaustive: bool = False) -> PlanResult:
         t0 = time.perf_counter()
         regions, region_caps = H.region_pools(cluster)
         total_chips = cluster.total_chips()
-        n_layers_units = self.profile.n_partition_units
-        best: Optional[SimResult] = incumbent
         n_cand = n_eval = n_oom = 0
+        memo0 = dict(self.memo.stats)
         stats: Dict = {"dp_combos": 0, "memo_hits": 0, "reused": 0,
                        "lb_pruned": 0, "incumbent": incumbent is not None,
-                       "plans": {}, "scores": {}}
+                       "plans": {}, "scores": {}, "est_keys": set(),
+                       "d_enumerated": 0,
+                       "frontier_size": 0, "frontier_simulated": 0}
         if changed_pools is None:
             changed_pools = frozenset()
+        cluster_types = cluster.gpu_types()
+        prices = self._price_table(cluster, regions, cluster_types)
 
         budget = objective.max_cost_per_iter
+        floor_t = (1.0 / objective.min_throughput
+                   if objective.min_throughput else None)
         decreasing = objective.kind == MAX_THROUGHPUT   # H3 vs H4
 
-        cluster_types = cluster.gpu_types()
+        # ---- incumbent revalidation (never trust a foreign SimResult) ----
+        best: Optional[SimResult] = None
+        if incumbent is not None:
+            if incumbent.cluster_fp == cluster.fingerprint() \
+                    and plan_fits(incumbent.plan, cluster) \
+                    and incumbent.valid and objective.satisfies(incumbent):
+                # verifiably simulated against *this* cluster (capacity AND
+                # prices are in the fingerprint) — no re-simulation needed
+                best = incumbent
+            else:
+                inc_plan = rehome_plan(incumbent.plan, cluster)
+                res = None
+                if inc_plan is not None:
+                    res = simulate(self.profile, inc_plan, cluster,
+                                   self.mem_cfg, self.engine_cfg)
+                    n_eval += 1
+                if res is not None and res.valid \
+                        and objective.satisfies(res):
+                    best = res
+                else:
+                    stats["incumbent_dropped"] = True
+                    stats["incumbent"] = False
+
+        # ---- Phase 1: enumerate + DP-rank into the candidate frontier ----
+        sim_all = exhaustive or not self.use_heuristics \
+            or self.sim_top_k is None
+        top_k = None if sim_all else max(1, self.sim_top_k)
+        frontier: List[_Candidate] = []
+        # max-heap (negated) of the K best rank estimates seen so far; the
+        # K-th best is an exact cut for frontier membership by estimate.
+        kth_heap: List[float] = []
+
+        def kth_bound() -> Optional[float]:
+            if top_k is None or len(kth_heap) < top_k:
+                return None
+            return -kth_heap[0]
+
+        def note_rank(v: float) -> None:
+            if top_k is None:
+                return
+            if len(kth_heap) < top_k:
+                heapq.heappush(kth_heap, -v)
+            elif v < -kth_heap[0]:
+                heapq.heapreplace(kth_heap, -v)
+
+        seq = 0
         for pp in H.pp_candidates(self.job.cfg.n_layers, total_chips,
                                   self.max_pp):
             if pp_allow is not None and pp not in pp_allow:
@@ -206,7 +386,7 @@ class SailorPlanner:
                 if tp_sel is None:
                     n_oom += 1
                     continue
-                max_d = self._max_d(pp, tp_sel, region_caps)
+                max_d = self._max_d(pp, tp_sel, region_caps, mbs)
                 if max_d == 0:
                     continue
                 # capacity-free minimum per-stage compute time: the basis of
@@ -218,9 +398,10 @@ class SailorPlanner:
                          for (lo, hi), sel in zip(splits, tp_sel)]
                 d_list = H.dp_candidates(self.job.global_batch, mbs, max_d,
                                          decreasing)
+                stats["d_enumerated"] += len(d_list)
                 min_chips_per_replica = sum(
                     min(min(tps) for tps in sel.values()) for sel in tp_sel)
-                prev_score: Optional[float] = None
+                group_best_est: Optional[float] = None
                 for d in d_list:
                     if d * min_chips_per_replica > total_chips:
                         continue             # cannot fit even the cheapest mix
@@ -229,88 +410,149 @@ class SailorPlanner:
                     if cached is not None and \
                             plan_footprint(cached).isdisjoint(changed_pools) \
                             and plan_fits(cached, cluster):
-                        res = simulate(self.profile, cached, cluster,
-                                       self.mem_cfg, self.engine_cfg)
-                        n_eval += 1
+                        # still this candidate's optimum: skip the DP, rank
+                        # by the previous simulated score (phase 2
+                        # re-simulates).  Not part of the H3/H4 walk.
+                        seq += 1
                         stats["reused"] += 1
-                        if not res.valid:
-                            n_oom += 1
-                            continue
-                        stats["plans"][key3] = cached
-                        if objective.satisfies(res) and \
-                                objective.better(best, res):
-                            best = res
-                        score = objective.score(res)
-                        stats["scores"][key3] = score
-                        if self.use_heuristics and prev_score is not None \
-                                and score >= prev_score:
-                            break
-                        prev_score = score
+                        prev = (reuse_scores or {}).get(key3,
+                                                        float("-inf"))
+                        frontier.append(_Candidate(
+                            seq=seq, key3=key3, est_time=prev, est_cost=prev,
+                            choices=None, splits=None, plan=cached,
+                            reused=True))
                         continue
                     # lower-bound prune: even with unlimited capacity this
                     # (pp, mbs, d) cannot run an iteration faster than
-                    # warmup + steady on its fastest per-stage options, so
-                    # when that already exceeds the incumbent / throughput
-                    # floor (x1.1 slack, matching the DP's bound), skip the
-                    # whole DP solve.
+                    # warmup + steady on its fastest per-stage options.
+                    # Bounds: the K-th best DP estimate (exact, est-to-est),
+                    # the re-simulated incumbent (x1.1 slack for the
+                    # simulator's extra terms), the throughput floor.
                     n_micro = self.job.global_batch // (d * mbs)
+                    lb_time = sum(min_t) + (n_micro - 1) * max(min_t)
+                    tb: Optional[float] = None
                     if objective.kind == MAX_THROUGHPUT:
-                        tb_lb = best.t_iter if best is not None else None
-                    else:
-                        tb_lb = (1.0 / objective.min_throughput
-                                 if objective.min_throughput else None)
-                    if tb_lb is not None and \
-                            sum(min_t) + (n_micro - 1) * max(min_t) \
-                            > tb_lb * 1.1:
+                        # frontier/incumbent bounds are widened by
+                        # pool_slack: a candidate beyond the top-K cut but
+                        # within the slack is still solved for the warm-
+                        # replan pool; the throughput floor stays strict
+                        # (a candidate that cannot satisfy the constraint
+                        # is useless even as a warm start).
+                        kth = kth_bound()
+                        cands = [kth * self.pool_slack
+                                 if kth is not None else None]
+                        if best is not None:
+                            cands.append(best.t_iter * 1.1
+                                         * self.pool_slack)
+                        if floor_t is not None:
+                            cands.append(floor_t * 1.1)
+                        tb = min((c for c in cands if c is not None),
+                                 default=None)
+                    elif floor_t is not None:
+                        # MIN_COST: a candidate that cannot meet the
+                        # throughput floor can never satisfy the constraint
+                        tb = floor_t * 1.1
+                    if tb is not None and lb_time > tb:
                         stats["lb_pruned"] += 1
                         continue
                     n_cand += 1
-                    # incumbent-driven pruning: best cost so far acts as the
-                    # budget for MIN_COST searches (reuses §4.2.3 machinery)
                     budget_eff = budget
-                    if objective.kind == MIN_COST and best is not None:
-                        budget_eff = min(budget_eff or 1e30,
-                                         best.cost_per_iter)
-                    if objective.kind == MAX_THROUGHPUT:
-                        tb = best.t_iter if best is not None else None
-                    else:
-                        # MIN_COST: a steady term exceeding the throughput
-                        # floor can never satisfy the constraint
-                        tb = (1.0 / objective.min_throughput
-                              if objective.min_throughput else None)
+                    if objective.kind == MIN_COST:
+                        # frontier/incumbent cost bounds act as the budget
+                        # (reuses the §4.2.3 machinery)
+                        kth = kth_bound()
+                        for c in (kth * self.pool_slack
+                                  if kth is not None else None,
+                                  best.cost_per_iter * 1.1
+                                  if best is not None else None):
+                            if c is not None:
+                                budget_eff = min(budget_eff or 1e30, c)
                     solver = DPSolver(
                         self.profile, cluster, splits, mbs, d, tp_sel,
                         regions, region_caps, budget=budget_eff,
                         frontier_keep=self.frontier_keep,
                         max_combos=self.max_combos,
-                        time_bound=tb)
+                        time_bound=tb, memo=self.memo, prices=prices,
+                        state_beam=self.state_beam)
                     part = solver.best(
                         kind=("cost" if objective.kind == MIN_COST
                               else "time"),
-                        max_time=(1.0 / objective.min_throughput
-                                  if objective.min_throughput else None))
+                        max_time=floor_t)
                     stats["dp_combos"] += solver.stats["combos"]
                     stats["memo_hits"] += solver.stats["memo_hits"]
                     if part is None:
-                        continue
-                    plan = _materialize(self.profile, solver.decode(part),
-                                        regions, cluster, splits, mbs, d)
-                    res = simulate(self.profile, plan, cluster, self.mem_cfg,
-                                   self.engine_cfg)
-                    n_eval += 1
-                    if not res.valid:
-                        n_oom += 1
-                        continue
-                    stats["plans"][key3] = plan
-                    if objective.satisfies(res) and objective.better(best, res):
-                        best = res
-                    # H3/H4 early exit within this (pp, mbs) group
-                    score = objective.score(res)
-                    stats["scores"][key3] = score
-                    if self.use_heuristics and prev_score is not None \
-                            and score >= prev_score:
-                        break
-                    prev_score = score
+                        continue    # gap: group best untouched, walk goes on
+                    est_t = part.est_time(solver.n_micro)
+                    est_c = part.est_cost(solver.n_micro)
+                    seq += 1
+                    frontier.append(_Candidate(
+                        seq=seq, key3=key3, est_time=est_t, est_cost=est_c,
+                        choices=solver.decode(part), splits=list(splits)))
+                    rank = est_c if objective.kind == MIN_COST else est_t
+                    note_rank(rank)
+                    # H3/H4 early exit: stop the d-walk when the estimate is
+                    # strictly worse than the group's best (plateaus and
+                    # invalid-candidate gaps continue — identical semantics
+                    # on fresh and warm paths, which skip the walk entirely).
+                    if self.use_heuristics:
+                        if group_best_est is not None \
+                                and rank > group_best_est * (1 + 1e-12):
+                            break
+                        if group_best_est is None or rank < group_best_est:
+                            group_best_est = rank
+
+        # ---- Phase 2: simulate the ranked frontier ----
+        stats["frontier_size"] = len(frontier)
+        ranked = sorted(frontier, key=self._rank_key(objective))
+        n_sim = 0
+        for cand in ranked:
+            if top_k is not None and n_sim >= top_k and best is not None:
+                # past the frontier: keep the materialized plan + its DP
+                # estimate in the candidate pool anyway — warm replans
+                # repair incumbents / reuse candidates from this pool, and
+                # after a shrink the top-K (capacity-maximal) plans rarely
+                # still fit, so the smaller-footprint tail is what keeps
+                # replans warm.  Materializing is cheap; only simulate()
+                # is not (re-simulation happens on reuse).
+                plan = cand.plan if cand.plan is not None else _materialize(
+                    self.profile, cand.choices, regions, cluster,
+                    cand.splits, cand.key3[1], cand.key3[2])
+                stats["plans"].setdefault(cand.key3, plan)
+                score = (cand.est_cost if objective.kind == MIN_COST
+                         else cand.est_time)
+                if score != float("-inf"):   # reuse entry w/o reuse_scores
+                    stats["scores"].setdefault(cand.key3, score)
+                if not cand.reused:
+                    # DP estimate, not a simulated score: flagged so the
+                    # replanner's incumbent repair tries simulated-score
+                    # entries first (estimates are systematically
+                    # optimistic).  Reused tail candidates keep their
+                    # previous *simulated* score, which the reuse
+                    # preconditions (no growth, no reprice, same
+                    # objective, footprint-disjoint shrink) keep exact —
+                    # capacity never enters simulate().
+                    stats["est_keys"].add(cand.key3)
+                continue
+            if cand.plan is not None:
+                plan = cand.plan
+            else:
+                plan = _materialize(self.profile, cand.choices, regions,
+                                    cluster, cand.splits, cand.key3[1],
+                                    cand.key3[2])
+            res = simulate(self.profile, plan, cluster, self.mem_cfg,
+                           self.engine_cfg)
+            n_eval += 1
+            n_sim += 1
+            stats["frontier_simulated"] += 1
+            if not res.valid:
+                n_oom += 1
+                continue
+            stats["plans"][cand.key3] = plan
+            stats["scores"][cand.key3] = objective.score(res)
+            if objective.satisfies(res) and objective.better(best, res):
+                best = res
+        for k, v in self.memo.stats.items():
+            stats[f"shared_{k}"] = v - memo0.get(k, 0)
         return PlanResult(
             best=best,
             search_time_s=time.perf_counter() - t0,
@@ -318,12 +560,53 @@ class SailorPlanner:
             stats=stats)
 
     # -------------------------------------------------------------------------
+    @staticmethod
+    def _rank_key(objective: Objective):
+        """Deterministic frontier order: estimate per the objective,
+        constraint-violating estimates last, enumeration index as the
+        tie-break.  Reused candidates carry one previous *objective score*
+        in both est fields (a cost for MIN_COST, a t_iter otherwise) — the
+        units only match the objective's own metric, so the cross-metric
+        infeasibility checks must not be applied to them (their previous
+        run already satisfied the same objective, which is a precondition
+        for reuse)."""
+        budget = objective.max_cost_per_iter
+        floor_t = (1.0 / objective.min_throughput
+                   if objective.min_throughput else None)
+
+        def key(c: _Candidate):
+            if objective.kind == MIN_COST:
+                infeas = not c.reused and floor_t is not None \
+                    and c.est_time > floor_t
+                return (1 if infeas else 0, c.est_cost, c.seq)
+            infeas = not c.reused and budget is not None \
+                and c.est_cost > budget
+            return (1 if infeas else 0, c.est_time, c.seq)
+        return key
+
+    def _price_table(self, cluster: ClusterSpec, regions: List[str],
+                     types: List[str]) -> Dict[Tuple[int, str], float]:
+        """Min $/chip-sec per (region_idx, type), shared by every DP solve
+        of this call (the per-solver rebuild scanned all zones for every
+        (pp, mbs, d) candidate)."""
+        prices: Dict[Tuple[int, str], float] = {}
+        for ri, rname in enumerate(regions):
+            zones = cluster.zones_in_region(rname)
+            for t in types:
+                prices[(ri, t)] = min(
+                    (z.price_per_sec(t) for z in zones), default=0.0)
+        return prices
+
     def _tp_selection(self, pp: int, splits, mbs: int, types: List[str]
                       ) -> Optional[List[Dict[str, List[int]]]]:
         """H2 + scaling: per stage/type, the minimum feasible TP and up to
         two larger powers of two (paper: "memory constraints and scaling
         heuristics") — larger TP trades chips for stage speed, which is how
         heterogeneous pipelines load-balance fast and slow stages."""
+        cache_key = (pp, mbs, tuple(types))
+        hit = self._tp_sel_cache.get(cache_key)
+        if hit is not None:
+            return hit or None           # () encodes a cached negative
         out: List[Dict[str, List[int]]] = []
         for i, (lo, hi) in enumerate(splits):
             sel: Dict[str, List[int]] = {}
@@ -343,14 +626,19 @@ class SailorPlanner:
                         opts.append(nxt)
                     sel[t] = opts
             if not sel:
+                self._tp_sel_cache[cache_key] = ()
                 return None              # no type can host this stage
             out.append(sel)
+        self._tp_sel_cache[cache_key] = out
         return out
 
-    def _max_d(self, pp: int, tp_sel, region_caps) -> int:
+    def _max_d(self, pp: int, tp_sel, region_caps, mbs: int) -> int:
         """Optimistic upper bound on D (H5: each stage's D replicas live in
-        one region): min over stages of the best region's replica capacity.
-        Infeasible D values simply produce no DP combos and fall through."""
+        one region): min over stages of the best region's replica capacity,
+        clamped to ``global_batch // mbs`` (larger D leaves zero
+        microbatches, so the old ``global_batch`` clamp admitted an
+        O(global_batch) scan).  Infeasible D values simply produce no DP
+        combos and fall through."""
         per_stage = []
         for sel in tp_sel:
             cap = 0
@@ -360,7 +648,7 @@ class SailorPlanner:
             per_stage.append(cap)
         if not per_stage or min(per_stage) == 0:
             return 0
-        return min(min(per_stage), self.job.global_batch)
+        return min(min(per_stage), self.job.global_batch // mbs)
 
 
 def plan_for(cfg, cluster: ClusterSpec, objective: Objective,

@@ -41,6 +41,10 @@ class SimResult:
     timing: time_mod.TimingBreakdown
     plan_seq_len: int = 0
     degenerate: bool = False     # timing below MIN_ITER_TIME_S / non-finite
+    # fingerprint of the cluster this result was simulated against — lets a
+    # consumer (the planner's incumbent revalidation) *verify* a SimResult
+    # applies to the cluster at hand instead of trusting the caller.
+    cluster_fp: tuple = ()
 
     @property
     def tokens_per_s(self) -> float:
@@ -78,4 +82,4 @@ def simulate(profile: JobProfile, plan: ParallelPlan,
         samples_per_s=samples_per_s,
         cost_per_iter=c["total"], cost_comp=c["comp"], cost_comm=c["comm"],
         peak_mem=mem, timing=t, plan_seq_len=profile.job.seq_len,
-        degenerate=degenerate)
+        degenerate=degenerate, cluster_fp=cluster.fingerprint())

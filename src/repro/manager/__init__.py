@@ -2,7 +2,7 @@
 
 Monitor availability feeds, replan incrementally on every change, price
 each transition, and reconfigure the elastic trainer kill-free (or roll
-back, or defer).  See DESIGN.md §10.
+back, or defer).  See DESIGN.md §11.
 """
 from repro.manager.controller import (Controller, ControllerConfig,
                                       fit_runtime_plan)

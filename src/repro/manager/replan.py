@@ -21,7 +21,9 @@ the common replan much cheaper than a cold search:
    from the previous search whose resource footprint is disjoint from the
    shrunk pools are re-simulated instead of re-solved (removing capacity a
    plan never used cannot change that candidate's optimum); see
-   ``SailorPlanner.plan``'s ``reuse=`` hook.
+   ``SailorPlanner.plan``'s ``reuse=`` hook.  The previous scores ride
+   along (``reuse_scores=``) so reused candidates rank correctly in the
+   planner's phase-2 simulation frontier.
 5. **Neighborhood restriction** — after a small delta (<= 25 % of total
    capacity) the outer search only visits (pp, mbs) near the previous
    optimum, falling back to the full space if nothing valid is found.
@@ -30,7 +32,11 @@ Invalidation: a grown pool disables (4); any price move disables (2) and
 (4) — cheaper chips can shift the optimal region or push optimal cost
 below the previous bound.  On top of everything the single long-lived
 ``SailorPlanner`` keeps its availability-independent tables warm across
-replans: the H2 ``TPTable`` and the profiler's per-layer cost cache.
+replans: the H2 ``TPTable``, the profiler's per-layer cost cache, and the
+cross-candidate ``CandidateMemo`` (per-(pp, split) pseudo-type tables and
+link constants shared by every DP solve — warm replans inherit it, so
+their DP phase skips the table builds entirely; hit counts surface in
+``result.stats["shared_pseudo_hits"]``).
 
 Every returned ``PlanResult`` carries the cache outcome in
 ``result.stats``: ``cache`` is ``"hit"`` / ``"warm"`` / ``"cold"``, plus
@@ -69,6 +75,12 @@ class IncrementalReplanner:
                  **planner_kw):
         self.job = job
         self.objective = objective
+        # widen the planner's candidate pool: replans repair incumbents,
+        # certify, and reuse candidates out of stats["plans"], so the
+        # search keeps (DP-solves and materializes, without simulating)
+        # candidates within 2.5x of its frontier bound — small-footprint
+        # plans that become the warm start after a capacity shrink.
+        planner_kw.setdefault("pool_slack", 2.5)
         self.planner = SailorPlanner(job, **planner_kw)
         self.max_cache = max_cache
         self.certify_eps = certify_eps
@@ -103,7 +115,7 @@ class IncrementalReplanner:
                 self._last_obj = obj
                 return out
 
-        incumbent = reuse = None
+        incumbent = reuse = reuse_scores = None
         changed = frozenset()
         shrink_only = False
         # cached candidates were optimal *for the objective they were
@@ -123,6 +135,7 @@ class IncrementalReplanner:
                 and same_obj
             if not grew and not repriced and same_obj:
                 reuse = prev.stats.get("plans") or None
+                reuse_scores = prev.stats.get("scores") or None
                 changed = frozenset(delta)
             incumbent = self._repair_incumbent(prev, cluster, obj)
 
@@ -169,14 +182,21 @@ class IncrementalReplanner:
             warm = True
         restricted = pp_allow is not None
         result = self.planner.plan(cluster, obj, incumbent=incumbent,
-                                   reuse=reuse, changed_pools=changed,
+                                   reuse=reuse, reuse_scores=reuse_scores,
+                                   changed_pools=changed,
                                    pp_allow=pp_allow, mbs_allow=mbs_allow)
-        if restricted and (result.best is None or result.n_evaluated == 0):
+        if restricted and (result.best is None
+                           or result.stats.get("frontier_simulated",
+                                               result.n_evaluated) == 0):
             # the neighborhood produced no valid candidate at all (best, if
-            # set, is just the seeded incumbent) — widen to the full space
+            # set, is just the seeded incumbent; frontier_simulated counts
+            # candidate simulations only, excluding the incumbent's own
+            # revalidation) — widen to the full space
             restricted = False
             result = self.planner.plan(cluster, obj, incumbent=incumbent,
-                                       reuse=reuse, changed_pools=changed)
+                                       reuse=reuse,
+                                       reuse_scores=reuse_scores,
+                                       changed_pools=changed)
         result = dataclasses.replace(
             result, search_time_s=time.perf_counter() - t0,
             stats={**result.stats, "cache": "warm" if warm else "cold",
@@ -205,7 +225,12 @@ class IncrementalReplanner:
         feasible cached plan in practice."""
         plans = prev.stats.get("plans") or {}
         scores = prev.stats.get("scores") or {}
-        order = sorted(plans, key=lambda k: scores.get(k, float("inf")))
+        # simulated scores first: est-scored pool entries (never simulated,
+        # systematically optimistic DP estimates) must not burn the repair
+        # budget ahead of validated candidates.
+        est_keys = prev.stats.get("est_keys") or set()
+        order = sorted(plans, key=lambda k: (k in est_keys,
+                                             scores.get(k, float("inf"))))
         best: Optional[SimResult] = None
         tried = 0
         for key in order:

@@ -181,15 +181,21 @@ class ElasticTrainer:
     # --- training -------------------------------------------------------------------
     def train(self, num_steps: int,
               events: Sequence[Tuple[int, int, bool]] = ()) -> List[Dict]:
-        """Run ``num_steps``; ``events`` = (at_step, new_n_devices, failure)."""
-        ev = {s: (n, f) for s, n, f in events}
+        """Run ``num_steps``; ``events`` = (at_step, new_n_devices, failure).
+
+        Multiple events scheduled at the same step are applied in the order
+        given (the old ``{step: event}`` dict silently kept only the last
+        one — a coalesced capacity-up + failure pair lost the failure)."""
+        ev: Dict[int, List[Tuple[int, bool]]] = {}
+        for s, n, f in events:
+            ev.setdefault(s, []).append((n, f))
         if self.mesh is None:
             self.build(len(jax.devices()))
         end = self.step + num_steps
         while self.step < end:
             if self.step in ev:
-                n, failure = ev.pop(self.step)
-                self.on_availability_change(n, failure)
+                for n, failure in ev.pop(self.step):
+                    self.on_availability_change(n, failure)
             batch = self.data.batch(self.step)
             with jax.set_mesh(self.mesh):
                 t0 = time.perf_counter()

@@ -186,3 +186,253 @@ def test_planner_deterministic():
     r1 = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
     r2 = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
     assert r1.best.plan == r2.best.plan
+
+
+# --- D-scan clamp (O(sqrt) divisor enumeration) -------------------------------------
+def test_dp_candidates_divisor_enumeration():
+    """gb=4096, mbs=8: D candidates are the divisors of gb//mbs=512, far
+    fewer than the gb//mbs ceiling the old 1..max_d scan admitted."""
+    cands = H.dp_candidates(4096, 8, 10 ** 9, decreasing=True)
+    assert cands == sorted(
+        (d for d in range(1, 513) if 4096 % (d * 8) == 0), reverse=True)
+    assert len(cands) <= 4096 // 8
+    assert max(cands) == 512 and len(cands) == 10
+    # non-dividing mbs can never tile the batch
+    assert H.dp_candidates(6, 4, 100, False) == []
+
+
+@given(st.integers(1, 4096), st.integers(1, 16), st.integers(0, 128))
+@settings(max_examples=60, deadline=None)
+def test_dp_candidates_match_naive_scan(gb, mbs, max_d):
+    want = sorted(d for d in range(1, max_d + 1) if gb % (d * mbs) == 0)
+    assert sorted(H.dp_candidates(gb, mbs, max_d, False)) == want
+
+
+def test_search_max_d_clamped_to_batch_over_mbs():
+    """A gb=4096 search on an oversized pool enumerates <= gb//mbs D values
+    per group (regression: the old clamp was gb itself)."""
+    job = TrainJob(cfg=OPT, seq_len=2048, global_batch=4096)
+    planner = SailorPlanner(job)
+    cluster = single_zone("A100-40", 1024)
+    splits = H.balanced_split(planner.profile, 2)
+    tp_sel = planner._tp_selection(2, splits, 8, cluster.gpu_types())
+    _, caps = H.region_pools(cluster)
+    assert planner._max_d(2, tp_sel, caps, 8) <= 4096 // 8
+    res = planner.plan(cluster, Objective(MAX_THROUGHPUT))
+    # total enumerated D values across every (pp, mbs) group stays far
+    # below one old-style scan of range(1, gb)
+    assert res.stats["d_enumerated"] < 4096
+
+
+# --- balanced_split: machine-free weights ------------------------------------------
+def test_balanced_split_unchanged_on_existing_configs():
+    """The canonical-balance roofline weights reproduce the splits the old
+    tpu-v5e-referenced weighting produced (snapshot from the seed impl)."""
+    expected = {
+        ("opt-350m", 2): [(0, 15), (15, 26)],
+        ("opt-350m", 4): [(0, 8), (8, 15), (15, 22), (22, 26)],
+        ("opt-350m", 8): [(0, 5), (5, 8), (8, 12), (12, 15), (15, 19),
+                          (19, 22), (22, 23), (23, 26)],
+        ("gpt-neo-2.7b", 4): [(0, 10), (10, 18), (18, 27), (27, 34)],
+        ("gpt-neo-2.7b", 8): [(0, 6), (6, 10), (10, 14), (14, 18), (18, 22),
+                              (22, 27), (27, 31), (31, 34)],
+        ("mixtral-8x22b", 4): [(0, 16), (16, 30), (30, 44), (44, 58)],
+        ("mamba2-130m", 6): [(0, 7), (7, 12), (12, 18), (18, 23), (23, 24),
+                             (24, 26)],
+    }
+    for (name, pp), want in expected.items():
+        profile = JobProfile(TrainJob(cfg=get_config(name), seq_len=2048,
+                                      global_batch=256))
+        assert H.balanced_split(profile, pp) == want, (name, pp)
+
+
+def test_balanced_split_survives_catalog_changes(monkeypatch):
+    """No hardcoded accelerator reference: removing any spec from the
+    catalog (the old code crashed without 'tpu-v5e') leaves splits
+    working and unchanged."""
+    from repro.core.profiler import hw_specs
+    profile = JobProfile(_job())
+    want = H.balanced_split(profile, 4)
+    trimmed = {k: v for k, v in hw_specs.ACCELERATORS.items()
+               if k != "tpu-v5e"}
+    monkeypatch.setattr(hw_specs, "ACCELERATORS", trimmed)
+    assert H.balanced_split(profile, 4) == want
+
+
+# --- slowest-last replica ordering (p2p pairing calibration) ------------------------
+def _mixed_stage_plan(profile, order0, order1, mbs):
+    from repro.core.planner.plan import (ParallelPlan, StageConfig,
+                                         StageReplica)
+    units = profile.n_partition_units
+    mid = units // 2
+    return ParallelPlan(stages=(
+        StageConfig(0, mid, tuple(StageReplica(g, 1, z) for g, z in order0)),
+        StageConfig(mid, units,
+                    tuple(StageReplica(g, 1, z) for g, z in order1))),
+        mbs=mbs, global_batch=256)
+
+
+def test_materialize_orders_replicas_slowest_last():
+    from repro.core.planner.dp_solver import StageChoice
+    from repro.core.planner.search import _materialize
+    job = _job()
+    profile = JobProfile(job)
+    cluster = multi_zone({
+        "z1": ("region-1", {"GH200": 2}),
+        "z2": ("region-1", {"A100-40": 1, "V100-16": 1}),
+    })
+    splits = H.balanced_split(profile, 2)
+    choices = [
+        StageChoice(0, (("A100-40", 1, 1), ("GH200", 1, 1))),
+        StageChoice(0, (("GH200", 1, 1), ("V100-16", 1, 1))),
+    ]
+    regions, _ = H.region_pools(cluster)
+    plan = _materialize(profile, choices, regions, cluster, splits, 8, 2)
+    for (lo, hi), stage in zip(splits, plan.stages):
+        times = [sum(profile.stage_cost(lo, hi, r.gpu_type, r.tp, 8)[:2])
+                 for r in stage.replicas]
+        assert times == sorted(times), "replicas must be slowest-last"
+    # GH200 (fastest) leads both stages -> fast chain pairs GH200->GH200
+    assert plan.stages[0].replicas[0].gpu_type == "GH200"
+    assert plan.stages[1].replicas[0].gpu_type == "GH200"
+
+
+def test_replica_ordering_changes_p2p_pairing_verdict():
+    """Pinned verdict change: with three speed classes whose lexicographic
+    order is not speed-monotone (A100-40 < GH200 < V100-16 by name, but
+    GH200 is fastest), the old lex ordering pairs chains across zones
+    while slowest-last pairs them within zones — the two orderings of the
+    *same* assignment simulate differently, so which plan wins is decided
+    by the ordering."""
+    job = _job()
+    profile = JobProfile(job)
+    cluster = multi_zone({
+        "z1": ("region-1", {"GH200": 2}),
+        "z2": ("region-1", {"A100-40": 1, "V100-16": 1}),
+    })
+    # slowest-last (what _materialize emits): GH200 leads both stages
+    ordered = _mixed_stage_plan(
+        profile, [("GH200", "z1"), ("A100-40", "z2")],
+        [("GH200", "z1"), ("V100-16", "z2")], mbs=8)
+    # old lexicographic ordering of the same assignment
+    lex = _mixed_stage_plan(
+        profile, [("A100-40", "z2"), ("GH200", "z1")],
+        [("GH200", "z1"), ("V100-16", "z2")], mbs=8)
+    r_ord = simulate(profile, ordered, cluster)
+    r_lex = simulate(profile, lex, cluster)
+    # pairing differs: ordered keeps both boundaries intra-zone for the
+    # fast chain; lex routes both chains across zones
+    assert abs(r_ord.t_iter - r_lex.t_iter) > 1e-6
+    obj = Objective(MAX_THROUGHPUT)
+    winner = ordered if obj.better(r_lex, r_ord) else lex
+    assert {r.gpu_type for r in winner.stages[0].replicas} == \
+        {"GH200", "A100-40"}
+
+
+# --- stale incumbent revalidation ---------------------------------------------------
+def test_stale_incumbent_cannot_suppress_better_plans():
+    """An incumbent simulated on a *bigger* cluster carries a t_iter no
+    plan on the small cluster can reach; seeding pruning bounds with it
+    used to prune every candidate and return the stale result.  It must be
+    re-simulated/rehomed on the new cluster and dropped when it no longer
+    fits."""
+    big = single_zone("A100-40", 256)
+    small = single_zone("A100-40", 16)
+    job = _job()
+    stale = SailorPlanner(job).plan(big, Objective(MAX_THROUGHPUT)).best
+    fresh = SailorPlanner(job).plan(small, Objective(MAX_THROUGHPUT))
+    warm = SailorPlanner(job).plan(small, Objective(MAX_THROUGHPUT),
+                                   incumbent=stale)
+    assert warm.best is not None
+    from repro.core.planner.search import plan_fits
+    assert plan_fits(warm.best.plan, small)
+    assert warm.stats.get("incumbent_dropped") is True
+    assert abs(warm.best.t_iter - fresh.best.t_iter) < 1e-9
+
+
+def test_repriced_incumbent_is_resimulated():
+    """A fitting incumbent from an old price-book must not seed stale
+    costs: plan() re-simulates it against the current cluster."""
+    cluster = single_zone("A100-40", 32)
+    job = _job()
+    base = SailorPlanner(job).plan(cluster, Objective(MIN_COST)).best
+    pricey = cluster.with_price(
+        {("us-central1-a", "A100-40"): 3.67 * 4})
+    warm = SailorPlanner(job).plan(pricey, Objective(MIN_COST),
+                                   incumbent=base)
+    assert warm.best is not None
+    # the returned result reflects the new price-book, not the stale one
+    assert warm.best.cost_per_iter > base.cost_per_iter * 2
+
+
+# --- determinism + reuse/fresh equivalence ------------------------------------------
+def test_plan_byte_identical_across_calls():
+    cluster = multi_zone({
+        "z-a": ("region-1", {"A100-40": 16, "V100-16": 8}),
+        "z-b": ("region-1", {"V100-16": 24}),
+        "z-c": ("region-2", {"A100-40": 16, "GH200": 8}),
+    })
+    r1 = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
+    r2 = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
+    assert r1.best is not None
+    assert r1.best.plan == r2.best.plan
+    assert repr(r1.best.plan) == repr(r2.best.plan)  # replica order included
+    assert r1.stats["scores"] == r2.stats["scores"]
+
+
+def test_reuse_path_matches_fresh_path():
+    """For an unchanged cluster the warm (reuse=) search returns the same
+    winner as a fresh search."""
+    cluster = heterogeneous_zone({"A100-40": 16, "V100-16": 16})
+    job = _job()
+    planner = SailorPlanner(job)
+    fresh = planner.plan(cluster, Objective(MAX_THROUGHPUT))
+    warm = planner.plan(cluster, Objective(MAX_THROUGHPUT),
+                        reuse=fresh.stats["plans"],
+                        reuse_scores=fresh.stats["scores"],
+                        changed_pools=frozenset())
+    assert warm.best is not None
+    assert warm.best.plan == fresh.best.plan
+    assert warm.stats["reused"] > 0
+
+
+# --- two-phase frontier invariant ---------------------------------------------------
+@pytest.mark.parametrize("caps,gbs", [
+    ({"A100-40": 16, "V100-16": 16}, 256),
+    ({"A100-40": 32, "V100-16": 96}, 512),
+    ({"A100-40": 64}, 256),
+])
+def test_frontier_never_drops_the_optimum(caps, gbs):
+    """The top-K simulation frontier returns the same winner score as
+    simulating every DP survivor (use_heuristics=False)."""
+    cluster = heterogeneous_zone(caps)
+    fast = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, gbs)
+    full = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, gbs,
+                    use_heuristics=False)
+    assert fast.best is not None and full.best is not None
+    assert fast.best.t_iter <= full.best.t_iter * (1 + 1e-9)
+    assert fast.n_evaluated <= full.n_evaluated
+
+
+def test_frontier_all_invalid_falls_back_to_exhaustive(monkeypatch):
+    """If the whole frontier fails simulation (here: every dp>1 plan is
+    poisoned to OOM, and the est-frontier bounds prune the slower dp=1
+    candidates out of the frontier entirely), the search degrades to the
+    exhaustive scan instead of returning None."""
+    import dataclasses as dc
+
+    import repro.core.planner.search as S
+    cluster = heterogeneous_zone({"A100-40": 16, "V100-16": 16})
+    real_simulate = S.simulate
+
+    def poisoned_simulate(profile, plan, cluster_, *a, **kw):
+        res = real_simulate(profile, plan, cluster_, *a, **kw)
+        if plan.dp > 1:
+            return dc.replace(res, valid=False)
+        return res
+
+    monkeypatch.setattr(S, "simulate", poisoned_simulate)
+    res = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256,
+                   sim_top_k=1)
+    assert res.best is not None
+    assert res.best.plan.dp == 1

@@ -47,6 +47,23 @@ def test_plan_then_train_then_restore(tmp_path):
     assert abs(log2[-1]["loss"] - loss_at_10) < 1e-4
 
 
+def test_same_step_events_apply_in_order(tmp_path):
+    """Two events scheduled at the same step both fire, in order (the old
+    ``{step: event}`` dict silently dropped all but the last)."""
+    cfg = get_config("smollm_360m").reduced()
+    data_cfg = data_lib.DataConfig(seq_len=16, global_batch=4)
+    opt_cfg = opt_lib.OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                      total_steps=30)
+    tr = ElasticTrainer(cfg, opt_cfg, data_cfg, workdir=str(tmp_path),
+                        checkpoint_every=100,
+                        plan_fn=lambda n: RuntimePlan(1, 1, 1, 1))
+    tr.build(1)
+    tr.train(5, events=[(2, 1, False), (2, 1, False)])
+    assert len(tr.reconfigs) == 2
+    assert [r["kind"] for r in tr.reconfigs] == ["kill-free", "kill-free"]
+    assert all(r["step"] == 2 for r in tr.reconfigs)
+
+
 def test_straggler_detection():
     from repro.train.elastic import StragglerDetector
     det = StragglerDetector(factor=3.0)
