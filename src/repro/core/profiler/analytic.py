@@ -19,6 +19,7 @@ import dataclasses
 import functools
 from typing import Dict, List, Tuple
 
+from repro.core.profiler import kernel_costs
 from repro.core.profiler.hw_specs import (AcceleratorSpec, LinkSpec,
                                           get_accelerator)
 from repro.core.simulator import network
@@ -168,9 +169,59 @@ class JobProfile:
                        + tokens * cfg.d_model * act_bytes)
         return tokens * self._inner_width() * act_bytes
 
+    # --- measured-kernel hooks ---------------------------------------------------
+    def _layer_kernel_ops(self, kind: str, tp: int, mbs: int
+                          ) -> List[Tuple[str, Tuple[int, ...], int]]:
+        """(op, shape-key, count) of the Pallas-kernel ops one layer of
+        ``kind`` runs per microbatch — the part of the roofline guess a
+        measured :mod:`kernel_costs` table can replace.  Matmul FLOPs stay
+        roofline (XLA's GEMMs track peak*efficiency closely; the custom
+        kernels are where block sizes/fusion/masking break the model)."""
+        cfg = self.cfg
+        s = self.job.seq_len
+        tokens = mbs * s
+        if kind == "embed":
+            return []                      # gather: no custom kernel
+        if kind == "head":                 # final norm rides with the head
+            return [("rmsnorm", (tokens, cfg.d_model), 1)]
+        ops: List[Tuple[str, Tuple[int, ...], int]] = [
+            ("rmsnorm", (tokens, cfg.d_model), 2)]
+        if cfg.family in ("ssm", "hybrid"):
+            ops.append(("ssd_scan",
+                        (mbs, s, cfg.ssm_nheads, cfg.ssm_headdim,
+                         cfg.ssm_state), 1))
+            return ops
+        if not cfg.window:                 # SWA runs the jnp path, not FA
+            heads = max(cfg.n_heads // tp, 1)
+            ops.append(("flash_attention", (mbs * heads, s, s, cfg.hd, 1),
+                        1))
+        return ops
+
+    def _measured_kernel_delta(self, kind: str, gpu_type: str,
+                               acc: AcceleratorSpec, tp: int,
+                               mbs: int) -> float:
+        """Seconds to add to the fwd roofline: sum over covered ops of
+        (measured - roofline); ops without table coverage contribute 0,
+        i.e. the roofline estimate stands."""
+        table = kernel_costs.get_kernel_table(gpu_type)
+        if table is None:
+            return 0.0
+        delta = 0.0
+        for op, shape, count in self._layer_kernel_ops(kind, tp, mbs):
+            t_meas = table.lookup(op, shape, self.cfg.dtype)
+            if t_meas is None:
+                continue
+            delta += count * (t_meas - kernel_costs.roofline_time(
+                op, shape, self.cfg.dtype, acc))
+        return delta
+
     # --- the profile entry ------------------------------------------------------
-    @functools.lru_cache(maxsize=100_000)
     def cost(self, kind: str, gpu_type: str, tp: int, mbs: int) -> LayerCost:
+        return self._cost(kind, gpu_type, tp, mbs, kernel_costs.epoch())
+
+    @functools.lru_cache(maxsize=100_000)
+    def _cost(self, kind: str, gpu_type: str, tp: int, mbs: int,
+              _table_epoch: int) -> LayerCost:
         cfg = self.cfg
         acc = get_accelerator(gpu_type)
         s = self.job.seq_len
@@ -182,6 +233,13 @@ class JobProfile:
         a_bytes = 2 * tokens * cfg.d_model * DTYPE_BYTES
         t_compute = max(flops / (acc.peak_flops * acc.efficiency),
                         (w_bytes + a_bytes) / acc.mem_bw)
+        # measured kernel tables: replace the roofline share of covered
+        # ops with calibrated wall-clock; floor keeps a pathological
+        # table (op roofline > whole-layer roofline) from going negative
+        t_compute = max(
+            t_compute + self._measured_kernel_delta(kind, gpu_type, acc,
+                                                    tp, mbs),
+            0.1 * t_compute)
         # Megatron TP collectives: 2 all-reduces of the activation per
         # block fwd (bwd doubles), over the intra-node fabric.
         t_tp = 0.0

@@ -46,6 +46,13 @@ class AcceleratorSpec:
         """HBM actually available to the training program."""
         return self.mem_bytes * (1.0 - self.reserved_mem_fraction)
 
+    def roofline_time(self, flops: float, nbytes: float) -> float:
+        """max(compute, bandwidth) seconds — the analytic per-op guess a
+        measured kernel cost table (``core/profiler/kernel_costs.py``)
+        overrides where it has coverage."""
+        return max(flops / (self.peak_flops * self.efficiency),
+                   nbytes / self.mem_bw)
+
 
 # --- catalog -----------------------------------------------------------------
 # Peak numbers from public datasheets. price = representative on-demand GCP.
@@ -137,6 +144,16 @@ LINKS: Dict[str, LinkSpec] = {
     # Across pods over DCN (TPU multi-pod analog of inter-zone).
     "dcn": LinkSpec("dcn", alpha=100e-6, beta=V5E_DCN_BW),
 }
+
+
+def kernel_table_path(chip: str) -> "os.PathLike":
+    """Default on-disk home of a chip's calibrated kernel cost table
+    (same cache root the kernel autotuner uses)."""
+    import os
+    from pathlib import Path
+    root = Path(os.environ.get("REPRO_KERNEL_CACHE_DIR",
+                               Path.home() / ".cache" / "repro-kernels"))
+    return root / f"kernel-costs-{chip}.json"
 
 
 def get_accelerator(name: str) -> AcceleratorSpec:

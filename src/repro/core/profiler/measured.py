@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -307,6 +307,115 @@ def calibrate_memory(cfgs, seq_len: int = 64,
         _host_mem_base(), fragmentation=a, act_fragmentation=b / a,
         runtime_overhead=c)
     return MemoryCalibration(mem_cfg=mem_cfg, points=rows)
+
+
+# --- kernel calibration (the third leg: per-op cost tables) -------------------
+
+@dataclasses.dataclass
+class KernelCalibration:
+    """Measured kernel cost table + the raw grid behind it.
+
+    ``table`` maps (op, shape, dtype) -> seconds on ``table.chip``;
+    registering it (done by default) makes ``analytic.JobProfile.cost``
+    consult the measurements before the roofline.  ``points`` rows keep
+    the per-shape measured vs roofline times for reporting/gating.
+    """
+
+    table: "KernelCostTable"
+    points: List[Dict]
+
+
+# small-by-default grids: CPU interpret mode is the measured backend on
+# this container, so a handful of shapes per op keeps calibration O(10 s)
+# while spanning ~two decades of work for the log-space interpolation.
+_ATTN_SHAPES = ((4, 128, 64), (4, 256, 64), (4, 512, 64))      # (bh, s, d)
+_DECODE_SHAPES = ((4, 256, 64), (4, 1024, 64))                 # (bh, sk, d)
+_NORM_SHAPES = ((512, 256), (2048, 256), (8192, 256))          # (rows, d)
+_SSD_SHAPES = ((1, 128, 2, 32, 16), (1, 512, 2, 32, 16))       # (b,s,h,p,n)
+
+
+def calibrate_kernels(chip: Optional[str] = None, *,
+                      dtypes=("float32",),
+                      attn_shapes=_ATTN_SHAPES,
+                      decode_shapes=_DECODE_SHAPES,
+                      norm_shapes=_NORM_SHAPES,
+                      ssd_shapes=_SSD_SHAPES,
+                      iters: int = 3, autotune_blocks: bool = False,
+                      register: bool = True,
+                      path: Optional[str] = None) -> KernelCalibration:
+    """Benchmark the real Pallas kernels into a per-(op, shape, dtype,
+    chip) cost table (interpret mode on this CPU container; Mosaic on a
+    real TPU — same code path, ``ops._interpret()`` decides).
+
+    With ``autotune_blocks`` the autotuner picks the tiling first (winner
+    cached on disk), so the table prices the *tuned* kernels.  The table
+    is registered into :mod:`kernel_costs` (``register=False`` to skip)
+    and optionally saved to ``path`` (JSON, reloadable with
+    ``KernelCostTable.load``).
+    """
+    from repro.core.profiler import kernel_costs
+    from repro.core.profiler.hw_specs import get_accelerator
+    from repro.kernels import autotune as at
+    from repro.kernels import ops as kops
+
+    chip = chip or at.default_chip()
+    acc = get_accelerator(chip) if chip in ACCELERATORS else None
+    table = kernel_costs.KernelCostTable(chip=chip)
+    points: List[Dict] = []
+    rng = np.random.default_rng(0)
+
+    def _arr(shape, dtype):
+        return jnp.asarray(rng.standard_normal(shape), dtype)
+
+    def _add(op, shape, dtype, fn):
+        t = at.bench_time(fn, iters=iters)
+        table.add(op, shape, dtype, t)
+        row = {"op": op, "shape": tuple(shape), "dtype": dtype,
+               "time_s": t}
+        if acc is not None:
+            row["roofline_s"] = kernel_costs.roofline_time(
+                op, shape, dtype, acc)
+        points.append(row)
+
+    blocks = "auto" if autotune_blocks else None
+    for dtype in dtypes:
+        for bh, s, d in attn_shapes:
+            q = _arr((1, s, bh, d), dtype)
+            k, v = _arr(q.shape, dtype), _arr(q.shape, dtype)
+            _add("flash_attention", (bh, s, s, d, 1), dtype,
+                 lambda q=q, k=k, v=v: kops.flash_attention(
+                     q, k, v, causal=True, block_q=blocks, block_k=blocks))
+        for bh, sk, d in decode_shapes:
+            q = _arr((1, 1, bh, d), dtype)
+            k, v = _arr((1, sk, bh, d), dtype), _arr((1, sk, bh, d), dtype)
+            n = jnp.asarray(sk, jnp.int32)
+            _add("flash_decode", (bh, sk, d), dtype,
+                 lambda q=q, k=k, v=v, n=n: kops.flash_attention_decode(
+                     q, k, v, cache_len=n))
+        for rows, d in norm_shapes:
+            x, sc = _arr((rows, d), dtype), _arr((d,), dtype)
+            _add("rmsnorm", (rows, d), dtype,
+                 lambda x=x, sc=sc: kops.rmsnorm(x, sc,
+                                                 block_rows=blocks))
+            r = _arr((rows, d), dtype)
+            _add("fused_add_rmsnorm", (rows, d), dtype,
+                 lambda x=x, r=r, sc=sc: kops.fused_add_rmsnorm(
+                     x, r, sc, block_rows=blocks))
+        for bs, s, h, p, n in ssd_shapes:
+            x = _arr((bs, s, h, p), dtype)
+            dt = jnp.asarray(rng.uniform(0.001, 0.1, (bs, s, h)),
+                             jnp.float32)
+            a = -jnp.asarray(rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+            bb = _arr((bs, s, n), dtype)
+            cc = _arr((bs, s, n), dtype)
+            _add("ssd_scan", (bs, s, h, p, n), dtype,
+                 lambda x=x, dt=dt, a=a, bb=bb, cc=cc: kops.ssd_scan(
+                     x, dt, a, bb, cc, chunk=blocks))
+    if register:
+        kernel_costs.register_kernel_table(table)
+    if path:
+        table.save(path)
+    return KernelCalibration(table=table, points=points)
 
 
 def calibrate_engine(cfg: ModelConfig, seq_len: int = 32, mbs: int = 2,

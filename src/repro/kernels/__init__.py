@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel layer (TPU target, interpret-validated on CPU):
+#   flash_attention.py  training + decode-shaped attention kernels
+#   rmsnorm.py / fused.py  RMSNorm and fused residual-add+RMSNorm
+#   ssd.py              Mamba-2 chunked SSD scan
+#   autotune.py         block-size autotuner w/ persistent on-disk cache
+#   ops.py              public (B,S,H,D) wrappers + autotune dispatch
+#   ref.py              pure-jnp oracles the kernels are swept against
+# `measured.calibrate_kernels` benchmarks these into per-(op, shape,
+# dtype, chip) cost tables the analytic profiler interpolates.

@@ -6,43 +6,111 @@ fallback: on a CPU backend (this container) kernels execute via
 ``interpret=True``, which runs the same kernel body under the Pallas
 interpreter — numerics identical, used by tests; on TPU they compile to
 Mosaic.
+
+Block sizes: passing explicit ints pins the tiling; ``None`` (default)
+uses the MXU-aligned defaults, or — when autotuning is on (the
+``REPRO_KERNEL_AUTOTUNE=1`` env switch or ``block=\"auto\"``) — the
+per-(op, shape, dtype, chip) winner from ``autotune.py``'s persistent
+cache.
 """
 from __future__ import annotations
+
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as at
 from repro.kernels import flash_attention as fa
+from repro.kernels import fused as fused_mod
 from repro.kernels import rmsnorm as rn
 from repro.kernels import ssd as ssd_mod
+
+BlockArg = Union[int, str, None]          # int | "auto" | None
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _tune(block: BlockArg) -> bool:
+    return block == "auto" or (block is None and at.enabled())
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128) -> jax.Array:
+                    causal: bool = True, block_q: BlockArg = None,
+                    block_k: BlockArg = None) -> jax.Array:
     """q: (B, S, H, D); k, v: (B, S, K, D) with H % K == 0 -> (B, S, H, D)."""
     b, s, h, d = q.shape
+    sk = k.shape[1]
     kheads = k.shape[2]
     if kheads != h:                       # GQA: replicate KV heads
         rep = h // kheads
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
     qt = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kt = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    vt = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    o = fa.flash_attention(qt, kt, vt, causal=causal, block_q=block_q,
-                           block_k=block_k, interpret=_interpret())
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    if _tune(block_q) or _tune(block_k):
+        cfg = at.tune_flash_attention(qt, kt, vt, causal=causal,
+                                      interpret=_interpret())
+        block_q, block_k = cfg["block_q"], cfg["block_k"]
+    bq = block_q if isinstance(block_q, int) else 128
+    bk = block_k if isinstance(block_k, int) else 128
+    o = fa.flash_attention(qt, kt, vt, causal=causal, block_q=bq,
+                           block_k=bk, interpret=_interpret())
     return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
 
 
-def ssd_scan(x, dt, a, b, c, *, chunk: int = 128):
-    return ssd_mod.ssd_scan(x, dt, a, b, c, chunk=chunk,
+def flash_attention_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           cache_len: jax.Array,
+                           block_k: BlockArg = None) -> jax.Array:
+    """Decode-shaped attention: q: (B, 1, H, D); k, v: (B, S, K, D) caches;
+    ``cache_len`` the (dynamic) valid prefix. -> (B, 1, H, D)."""
+    b, one, h, d = q.shape
+    assert one == 1, q.shape
+    s = k.shape[1]
+    kheads = k.shape[2]
+    if kheads != h:
+        rep = h // kheads
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.reshape(b, h, d).reshape(b * h, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    bk = block_k if isinstance(block_k, int) else 128
+    o = fa.flash_attention_decode(qt, kt, vt, cache_len, block_k=bk,
+                                  interpret=_interpret())
+    return o.reshape(b, h, d)[:, None].reshape(b, 1, h, d)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: BlockArg = None):
+    if _tune(chunk):
+        chunk = at.tune_ssd_scan(x, dt, a, b, c,
+                                 interpret=_interpret())["chunk"]
+    ck = chunk if isinstance(chunk, int) else 128
+    return ssd_mod.ssd_scan(x, dt, a, b, c, chunk=ck,
                             interpret=_interpret())
 
 
-def rmsnorm(x, scale, *, eps: float = 1e-5):
-    return rn.rmsnorm(x, scale, eps=eps, interpret=_interpret())
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: BlockArg = None):
+    if _tune(block_rows):
+        block_rows = at.tune_rmsnorm(x, scale, eps=eps,
+                                     interpret=_interpret())["block_rows"]
+    br = block_rows if isinstance(block_rows, int) else 256
+    return rn.rmsnorm(x, scale, eps=eps, block_rows=br,
+                      interpret=_interpret())
+
+
+def fused_add_rmsnorm(x, res, scale, *, eps: float = 1e-5,
+                      block_rows: BlockArg = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (rmsnorm(x + res) * scale, x + res) in one HBM pass."""
+    if _tune(block_rows):
+        block_rows = at.tune_fused_add_rmsnorm(
+            x, res, scale, eps=eps,
+            interpret=_interpret())["block_rows"]
+    br = block_rows if isinstance(block_rows, int) else 256
+    return fused_mod.fused_add_rmsnorm(x, res, scale, eps=eps,
+                                       block_rows=br,
+                                       interpret=_interpret())

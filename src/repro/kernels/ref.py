@@ -58,3 +58,21 @@ def rmsnorm_ref(x: jax.Array, scale: jax.Array,
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
             ).astype(x.dtype)
+
+
+def fused_add_rmsnorm_ref(x: jax.Array, res: jax.Array, scale: jax.Array,
+                          eps: float = 1e-5) -> Tuple[jax.Array, jax.Array]:
+    """(rmsnorm(x + res) * scale, x + res) — the unfused two-pass truth."""
+    y = (x.astype(jnp.float32) + res.astype(jnp.float32)).astype(x.dtype)
+    return rmsnorm_ref(y, scale, eps), y
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len) -> jax.Array:
+    """q: (BH, D); k, v: (BH, S, D); positions >= kv_len masked out."""
+    d = q.shape[-1]
+    s = jnp.einsum("bd,bsd->bs", q, k).astype(jnp.float32) / math.sqrt(d)
+    mask = jnp.arange(k.shape[1])[None] >= kv_len
+    s = jnp.where(mask, -1e30, s)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bs,bsd->bd", p.astype(v.dtype), v).astype(q.dtype)

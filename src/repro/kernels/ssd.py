@@ -86,10 +86,20 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
              interpret: bool = False):
     """x: (B, S, H, P); dt: (B, S, H); a: (H,); b, c: (B, S, N).
 
-    Returns (y (B,S,H,P), final_state (B,H,P,N)).  S % chunk == 0."""
-    bs, s, h, p = x.shape
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  S need not divide
+    ``chunk``: the tail is zero-padded, and padded steps are exact
+    no-ops on the recurrence (dt = 0 -> decay exp(0) = 1, update 0), so
+    the final state is unaffected and padded y rows are sliced off."""
+    bs, s_orig, h, p = x.shape
     n = b.shape[-1]
-    assert s % chunk == 0, (s, chunk)
+    chunk = max(1, min(chunk, s_orig))
+    pad = (-s_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
     nc = s // chunk
     # layout: (B, H, nc, Q, ...) so (b, h) are grid-major, chunks minor
     xr = x.transpose(0, 2, 1, 3).reshape(bs, h, nc, chunk, p)
@@ -124,4 +134,4 @@ def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
         interpret=interpret,
     )(xr, dtr, a.astype(jnp.float32), br, cr)
     y = y.reshape(bs, h, s, p).transpose(0, 2, 1, 3)
-    return y, st
+    return (y[:, :s_orig] if pad else y), st

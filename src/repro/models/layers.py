@@ -31,6 +31,24 @@ def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
     return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
 
 
+def rms_norm_residual(res: jax.Array, delta: jax.Array, scale: jax.Array,
+                      eps: float = 1e-5, impl: str = "jnp"
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """``y = res + delta; h = rms_norm(y)`` -> (h, y).
+
+    The pre-norm residual seam every transformer block repeats.  With
+    ``impl="pallas"`` both outputs come from the fused Pallas kernel
+    (one HBM pass, see kernels/fused.py); otherwise plain jnp, which XLA
+    fuses less aggressively across the rsqrt.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        h, y = kops.fused_add_rmsnorm(res, delta, scale, eps=eps)
+        return h, y
+    y = res + delta
+    return rms_norm(y, scale, eps), y
+
+
 def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     """Rotary embedding. x: (..., S, H, hd); positions: (S,) or (B, S)."""
     hd = x.shape[-1]
@@ -185,9 +203,14 @@ def attn_window_linear(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def attn_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
-                cache_len: jax.Array, window: int = 0) -> jax.Array:
+                cache_len: jax.Array, window: int = 0,
+                impl: str = "naive") -> jax.Array:
     """Single-token decode. q: (B,1,H,hd); caches: (B,S,K,hd)."""
     b, _, h, hd = q.shape
+    if impl == "pallas" and window == 0:
+        from repro.kernels import ops as kops
+        return kops.flash_attention_decode(q, k_cache, v_cache,
+                                           cache_len=cache_len)
     n_kv = k_cache.shape[2]
     qg = _split_gqa(q, n_kv)[:, 0]                      # (B,K,G,hd)
     scale = 1.0 / math.sqrt(hd)
@@ -214,9 +237,12 @@ def attention(q, k, v, *, impl: str = "chunked", causal: bool = True,
         k_pos = jnp.arange(k.shape[1])
     if impl == "pallas":
         from repro.kernels import ops as kops
-        if (window == 0 and causal and kv_len is None
-                and q.shape[1] == k.shape[1]):
-            return kops.flash_attention(q, k, v, causal=True)
+        # the kernel handles causal/non-causal and non-divisible (even
+        # unequal) sequence lengths via internal pad+mask; only window
+        # and explicit kv_len masking still route to the jnp fallback
+        if window == 0 and kv_len is None and (
+                not causal or q.shape[1] == k.shape[1]):
+            return kops.flash_attention(q, k, v, causal=causal)
         impl = "chunked"
     if impl == "window" or (window > 0 and causal and q.shape[1] > window
                             and impl != "naive" and kv_len is None):
@@ -229,7 +255,13 @@ def attention(q, k, v, *, impl: str = "chunked", causal: bool = True,
                         block_remat=block_remat)
 
 
-def pick_attn_impl(cfg_impl: str, seq_len: int) -> str:
+def pick_attn_impl(cfg_impl: str, seq_len: int,
+                   backend: Optional[str] = None) -> str:
+    """Resolve ``attn_impl="auto"``: the Pallas kernel wherever it
+    compiles to Mosaic (TPU), else naive for short sequences and the
+    chunked online-softmax beyond (full scores don't fit)."""
     if cfg_impl != "auto":
         return cfg_impl
+    if (backend or jax.default_backend()) == "tpu":
+        return "pallas"
     return "naive" if seq_len <= 2048 else "chunked"

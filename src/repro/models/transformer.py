@@ -100,8 +100,9 @@ def _qkv(cfg: ModelConfig, p, x, positions):
     return q, k, v
 
 
-def attn_block(cfg: ModelConfig, p, x, positions, impl: str,
+def attn_delta(cfg: ModelConfig, p, x, positions, impl: str,
                mesh: Optional[Mesh]):
+    """The attention sub-block's residual delta (un-added)."""
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = _qkv(cfg, p, h, positions)
     if mesh is not None:
@@ -109,20 +110,42 @@ def attn_block(cfg: ModelConfig, p, x, positions, impl: str,
     o = L.attention(q, k, v, impl=impl, causal=True, window=cfg.window,
                     q_pos=positions, k_pos=positions,
                     block_remat=cfg.attn_block_remat)
-    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+
+
+def attn_block(cfg: ModelConfig, p, x, positions, impl: str,
+               mesh: Optional[Mesh]):
+    delta, kv = attn_delta(cfg, p, x, positions, impl, mesh)
+    return x + delta, kv
+
+
+def _ffn(cfg: ModelConfig, p, h, mesh: Optional[Mesh]):
+    """FFN applied to an already-normed hidden state."""
+    if cfg.family == "moe":
+        return moe_mod.moe_ffn(cfg, p, h, mesh)
+    if cfg.ffn_act == "swiglu":
+        return L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    act = (jax.nn.gelu if cfg.ffn_act == "gelu"
+           else lambda u: jnp.square(jax.nn.relu(u)))
+    return act(h @ p["w_up"]) @ p["w_down"]
 
 
 def ffn_block(cfg: ModelConfig, p, x, mesh: Optional[Mesh]):
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
-    if cfg.family == "moe":
-        y = moe_mod.moe_ffn(cfg, p, h, mesh)
-    elif cfg.ffn_act == "swiglu":
-        y = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
-    else:
-        act = (jax.nn.gelu if cfg.ffn_act == "gelu"
-               else lambda u: jnp.square(jax.nn.relu(u)))
-        y = act(h @ p["w_up"]) @ p["w_down"]
-    return x + y
+    return x + _ffn(cfg, p, h, mesh)
+
+
+def decoder_block(cfg: ModelConfig, p, x, positions, impl: str,
+                  mesh: Optional[Mesh]):
+    """attn_block + ffn_block with the residual seam between them fused:
+    the post-attention add and the FFN's pre-norm run as one Pallas pass
+    when ``impl == "pallas"`` (see kernels/fused.py); identical math on
+    the jnp path."""
+    delta, kv = attn_delta(cfg, p, x, positions, impl, mesh)
+    h, x = L.rms_norm_residual(
+        x, delta, p["ln2"], cfg.norm_eps,
+        impl="pallas" if impl == "pallas" else "jnp")
+    return x + _ffn(cfg, p, h, mesh), kv
 
 
 def _remat(fn, mode: str):
@@ -153,8 +176,7 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
         x = constrain(x, batch_spec(mesh, b, None, None))
 
     def body(x, lp):
-        x, (k, v) = attn_block(cfg, lp, x, positions, impl, mesh)
-        x = ffn_block(cfg, lp, x, mesh)
+        x, (k, v) = decoder_block(cfg, lp, x, positions, impl, mesh)
         if mesh is not None:
             x = constrain(x, batch_spec(mesh, x.shape[0], None, None))
         if return_cache:
@@ -213,8 +235,9 @@ def decode(cfg: ModelConfig, params, cache, tokens: jax.Array, *,
         kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
         vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
         o = L.attn_decode(q, kc, vc, cache_len=valid, window=0)
-        x = x + jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), lp["wo"])
-        x = ffn_block(cfg, lp, x, mesh)
+        delta = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), lp["wo"])
+        h, x = L.rms_norm_residual(x, delta, lp["ln2"], cfg.norm_eps)
+        x = x + _ffn(cfg, lp, h, mesh)
         return x, (kc, vc)
 
     x, (k_new, v_new) = jax.lax.scan(

@@ -1,0 +1,199 @@
+"""Measured kernel cost tables: lookup rules, persistence, calibration,
+and the analytic-profiler integration (LayerCost consults the table).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.profiler import kernel_costs as kc
+from repro.core.profiler import measured
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.profiler.hw_specs import get_accelerator
+from repro.models.config import ModelConfig
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    kc.clear_kernel_tables()
+    yield
+    kc.clear_kernel_tables()
+
+
+def _small_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=256,
+                n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=1024,
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# --- lookup rules -------------------------------------------------------------
+
+def test_lookup_exact_hit():
+    t = kc.KernelCostTable(chip="c")
+    t.add("rmsnorm", (512, 256), "float32", 1e-3)
+    assert t.lookup("rmsnorm", (512, 256), "float32") == 1e-3
+    t.add("rmsnorm", (512, 256), "float32", 2e-3)     # re-measure replaces
+    assert t.lookup("rmsnorm", (512, 256), "float32") == 2e-3
+    assert t.n_points() == 1
+
+
+def test_lookup_log_space_interpolation():
+    t = kc.KernelCostTable(chip="c")
+    t.add("rmsnorm", (512, 256), "float32", 1e-3)
+    t.add("rmsnorm", (2048, 256), "float32", 4e-3)
+    # rows=1024 sits at the log-midpoint of work -> geometric mean of times
+    got = t.lookup("rmsnorm", (1024, 256), "float32")
+    assert got == pytest.approx(math.sqrt(1e-3 * 4e-3), rel=1e-9)
+
+
+def test_lookup_refuses_outside_support():
+    t = kc.KernelCostTable(chip="c")
+    t.add("rmsnorm", (512, 256), "float32", 1e-3)
+    t.add("rmsnorm", (2048, 256), "float32", 4e-3)
+    assert t.lookup("rmsnorm", (64, 256), "float32") is None     # below
+    assert t.lookup("rmsnorm", (65536, 256), "float32") is None  # above
+    assert t.lookup("rmsnorm", (1024, 256), "bfloat16") is None  # dtype
+    assert t.lookup("flash_decode", (4, 256, 64), "float32") is None  # op
+    # a single point supports exact hits only
+    t2 = kc.KernelCostTable(chip="c")
+    t2.add("rmsnorm", (512, 256), "float32", 1e-3)
+    assert t2.lookup("rmsnorm", (513, 256), "float32") is None
+
+
+def test_save_load_roundtrip(tmp_path):
+    t = kc.KernelCostTable(chip="testchip")
+    t.add("flash_attention", (4, 256, 256, 64, 1), "float32", 2e-3)
+    t.add("rmsnorm", (512, 256), "bfloat16", 1e-4)
+    p = tmp_path / "costs.json"
+    t.save(p)
+    t2 = kc.KernelCostTable.load(p)
+    assert t2.chip == "testchip"
+    assert t2.lookup("flash_attention", (4, 256, 256, 64, 1),
+                     "float32") == 2e-3
+    assert t2.lookup("rmsnorm", (512, 256), "bfloat16") == 1e-4
+
+
+def test_roofline_time_positive_for_all_ops():
+    acc = get_accelerator("cpu-host")
+    shapes = {"flash_attention": (4, 256, 256, 64, 1),
+              "flash_decode": (4, 256, 64),
+              "rmsnorm": (512, 256),
+              "fused_add_rmsnorm": (512, 256),
+              "ssd_scan": (1, 128, 2, 32, 16)}
+    for op in kc.KERNEL_OPS:
+        assert kc.roofline_time(op, shapes[op], "float32", acc) > 0
+    with pytest.raises(ValueError, match="unknown kernel op"):
+        kc.op_flops_bytes("gemm", (1,), "float32")
+
+
+# --- profiler integration -----------------------------------------------------
+
+def _exact_table(prof, gpu="cpu-host", tp=1, mbs=2, factor=10.0):
+    """Table with exact hits for every kernel op of the 'block' layer,
+    each priced at factor x its roofline."""
+    acc = get_accelerator(gpu)
+    t = kc.KernelCostTable(chip=gpu)
+    for op, shape, _ in prof._layer_kernel_ops("block", tp, mbs):
+        t.add(op, shape, prof.cfg.dtype,
+              factor * kc.roofline_time(op, shape, prof.cfg.dtype, acc))
+    return t
+
+
+def test_layer_cost_consults_table_and_epoch_invalidates():
+    prof = JobProfile(TrainJob(_small_cfg(), seq_len=128, global_batch=8))
+    base = prof.cost("block", "cpu-host", 1, 2).fwd
+    kc.register_kernel_table(_exact_table(prof, factor=10.0))
+    with_table = prof.cost("block", "cpu-host", 1, 2).fwd
+    assert with_table > base          # measured kernels cost extra
+    # clearing the registry must invalidate the memoized LayerCost
+    kc.clear_kernel_tables()
+    assert prof.cost("block", "cpu-host", 1, 2).fwd == base
+
+
+def test_layer_cost_interpolates_unseen_shape():
+    """Block shapes absent from the table but inside its work range are
+    priced via interpolation, not the roofline."""
+    cfg = _small_cfg()
+    prof = JobProfile(TrainJob(cfg, seq_len=128, global_batch=8))
+    acc = get_accelerator("cpu-host")
+    t = kc.KernelCostTable(chip="cpu-host")
+    for op, shape, _ in prof._layer_kernel_ops("block", 1, 2):
+        # bracket each block shape with half- and double-work neighbours
+        for f in (0.5, 2.0):
+            sh = list(shape)
+            sh[0] = max(1, int(sh[0] * f))
+            t.add(op, tuple(sh), cfg.dtype,
+                  10.0 * kc.roofline_time(op, tuple(sh), cfg.dtype, acc))
+    kc.register_kernel_table(t)
+    base_epoch_free = JobProfile(TrainJob(cfg, seq_len=128, global_batch=8))
+    kc.clear_kernel_tables()
+    base = base_epoch_free.cost("block", "cpu-host", 1, 2).fwd
+    kc.register_kernel_table(t)
+    assert prof.cost("block", "cpu-host", 1, 2).fwd > base
+
+
+def test_layer_cost_falls_back_without_coverage():
+    """bf16 job vs a float32-only table: every lookup misses, the
+    roofline stands."""
+    cfg = _small_cfg(dtype="bfloat16")
+    prof = JobProfile(TrainJob(cfg, seq_len=128, global_batch=8))
+    base = prof.cost("block", "cpu-host", 1, 2).fwd
+    f32_prof = JobProfile(TrainJob(_small_cfg(), seq_len=128,
+                                   global_batch=8))
+    kc.register_kernel_table(_exact_table(f32_prof))
+    assert prof.cost("block", "cpu-host", 1, 2).fwd == base
+
+
+def test_layer_cost_floor_guards_pathological_table():
+    """A table claiming near-zero kernel time cannot drive a layer cost
+    negative; it floors at 10% of the roofline."""
+    prof = JobProfile(TrainJob(_small_cfg(), seq_len=128, global_batch=8))
+    base = prof.cost("block", "cpu-host", 1, 2).fwd
+    kc.register_kernel_table(_exact_table(prof, factor=1e-12))
+    floored = prof.cost("block", "cpu-host", 1, 2).fwd
+    assert 0 < floored < base
+
+
+def test_embed_layer_has_no_kernel_ops():
+    prof = JobProfile(TrainJob(_small_cfg(), seq_len=128, global_batch=8))
+    assert prof._layer_kernel_ops("embed", 1, 2) == []
+    assert [op for op, _, _ in prof._layer_kernel_ops("head", 1, 2)] \
+        == ["rmsnorm"]
+
+
+def test_ssm_block_prices_ssd_scan():
+    cfg = _small_cfg(family="ssm", n_heads=0, n_kv_heads=0,
+                     ssm_state=16, ssm_headdim=32, ssm_chunk=8)
+    prof = JobProfile(TrainJob(cfg, seq_len=128, global_batch=8))
+    ops = {op for op, _, _ in prof._layer_kernel_ops("block", 1, 2)}
+    assert ops == {"rmsnorm", "ssd_scan"}
+
+
+# --- calibrate_kernels --------------------------------------------------------
+
+def test_calibrate_kernels_registers_and_saves(tmp_path):
+    p = tmp_path / "costs.json"
+    cal = measured.calibrate_kernels(
+        "cpu-host",
+        attn_shapes=((2, 64, 32),),
+        decode_shapes=((2, 64, 32),),
+        norm_shapes=((64, 64), (256, 64)),
+        ssd_shapes=((1, 64, 1, 32, 16),),
+        iters=1, register=True, path=p)
+    assert cal.table.n_points() == 7   # fused rides with the norm grid
+    assert kc.get_kernel_table("cpu-host") is cal.table
+    for (op, _dt), rows in cal.table.entries.items():
+        for sh, t in rows:
+            assert t > 0, (op, sh)
+    # measured-vs-roofline pairs recorded for the bench report
+    assert all(p["time_s"] > 0 and p["roofline_s"] > 0
+               for p in cal.points)
+    # interpolation works between the two norm points
+    assert cal.table.lookup("rmsnorm", (128, 64), "float32") is not None
+    # persisted table reloads to the same lookups
+    t2 = kc.KernelCostTable.load(p)
+    assert t2.lookup("rmsnorm", (64, 64), "float32") == \
+        cal.table.lookup("rmsnorm", (64, 64), "float32")
