@@ -1,10 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes a machine-readable
+run report (per-module wall-clock + ok/error/gate outcome) to
+``artifacts/bench_report.json`` so CI and the next session can see what
+ran, how long it took and which gates held without parsing stdout.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig7,roofline]
 """
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -19,9 +24,33 @@ MODULES = [
     ("fig5", "benchmarks.simulator_accuracy"),        # Figs 5/6
     ("memory_accuracy", "benchmarks.memory_accuracy"),  # Fig 3/5a
     ("replan", "benchmarks.replan_latency"),          # §4.4 control plane
+    ("chaos", "benchmarks.chaos_suite"),              # §4.4 self-healing
+    #  (CHAOS_GATE=1 enforces convergence/detection/zero-FP budgets)
     ("roofline", "benchmarks.roofline"),              # §Roofline (dry-run)
     ("kern", "benchmarks.kernels_bench"),             # kernel microbench
 ]
+
+# modules with an accuracy_budget.json gate and the env var that arms it
+GATES = {
+    "search_time": "SEARCH_TIME_GATE",
+    "fig5": "SIM_ACCURACY_GATE",
+    "memory_accuracy": "MEM_ACCURACY_GATE",
+    "chaos": "CHAOS_GATE",
+    "kern": "KERNELS_GATE",
+}
+
+REPORT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "artifacts", "bench_report.json")
+
+
+def _write_report(results, total_s) -> None:
+    os.makedirs(os.path.dirname(REPORT_PATH), exist_ok=True)
+    with open(REPORT_PATH, "w") as f:
+        json.dump({"total_s": round(total_s, 3), "modules": results},
+                  f, indent=2)
+        f.write("\n")
+    print(f"# report -> {REPORT_PATH}", flush=True)
 
 
 def main() -> None:
@@ -32,22 +61,36 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failed = []
+    results = []
     for key, modname in MODULES:
         if only and key not in only:
             continue
+        gate_var = GATES.get(key)
+        gated = bool(gate_var) and \
+            os.environ.get(gate_var, "") not in ("", "0")
+        rec = {"name": key, "module": modname,
+               "gate": gate_var, "gate_armed": gated}
         t1 = time.time()
         try:
             mod = __import__(modname, fromlist=["run"])
             mod.run()
+            rec["outcome"] = "gate-passed" if gated else "ok"
         except (Exception, SystemExit) as e:
             # SystemExit included: a gated module (e.g. search_time under
             # SEARCH_TIME_GATE) failing its budget must not abort the
             # remaining modules — it is recorded and re-raised at the end.
             failed.append(key)
+            rec["outcome"] = "gate-failed" \
+                if gated and isinstance(e, SystemExit) else "error"
+            rec["error"] = f"{type(e).__name__}: {e}"
             print(f"{key}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
-        print(f"# {key} done in {time.time() - t1:.1f}s", flush=True)
-    print(f"# total {time.time() - t0:.1f}s")
+        rec["wall_s"] = round(time.time() - t1, 3)
+        results.append(rec)
+        print(f"# {key} done in {rec['wall_s']:.1f}s", flush=True)
+    total = time.time() - t0
+    print(f"# total {total:.1f}s")
+    _write_report(results, total)
     if failed:
         raise SystemExit(f"benchmark modules failed: {failed}")
 

@@ -52,7 +52,7 @@ wall-clock on host devices (dispatch of one jitted program / one
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Mapping, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +69,9 @@ class EngineConfig:
     fixed_overhead_s: float = 0.0     # calibrated per-iteration overhead
     per_task_overhead_s: float = 0.0  # calibrated per-task dispatch overhead
     max_exact_microbatches: int = 0   # 0 = auto (2 * n_stages * v + 4)
+    record_timeline: bool = False     # keep tagged (tag, start, end) events
+    #                                   in PipelineResult.timeline — the
+    #                                   telemetry layer's sample source
 
     def exact_cap(self, n_stages: int) -> int:
         if self.max_exact_microbatches > 0:
@@ -119,20 +122,27 @@ class PipelineResult:
     busy_per_micro: Dict[Tuple[int, int], float]   # steady busy per worker
     period: float                     # steady-state cycle time (per micro)
     n_tasks: int
+    # with cfg.record_timeline: every tagged task as (tag, start, end) —
+    # tags: ("F"|"B", stage, replica, micro), ("PF"|"PB", boundary, ra, rb,
+    # micro), ("AR", stage, bucket), ("U", stage, replica).  This is the
+    # event timeline the telemetry layer converts into bus samples.
+    timeline: Optional[List[Tuple[Tuple, float, float]]] = None
 
 
 # --- core: tasks on serialized resources --------------------------------------
 
 class _Task:
-    __slots__ = ("dur", "deps", "prio", "start", "end", "seq")
+    __slots__ = ("dur", "deps", "prio", "start", "end", "seq", "tag")
 
-    def __init__(self, dur: float, prio: Tuple = (), seq: int = 0):
+    def __init__(self, dur: float, prio: Tuple = (), seq: int = 0,
+                 tag: Optional[Tuple] = None):
         self.dur = dur
         self.deps: List["_Task"] = []
         self.prio = prio
         self.start = -1.0
         self.end = -1.0
         self.seq = seq
+        self.tag = tag
 
 
 class _Resource:
@@ -156,10 +166,18 @@ class Sim:
             r = self._resources[key] = _Resource(fifo)
         return r
 
-    def task(self, dur: float, prio: Tuple = ()) -> _Task:
-        t = _Task(dur, prio, seq=len(self._tasks))
+    def task(self, dur: float, prio: Tuple = (),
+             tag: Optional[Tuple] = None) -> _Task:
+        t = _Task(dur, prio, seq=len(self._tasks), tag=tag)
         self._tasks.append(t)
         return t
+
+    def timeline(self) -> List[Tuple[Tuple, float, float]]:
+        """Tagged tasks as (tag, start, end), start-ordered (after run)."""
+        rows = [(t.tag, t.start, t.end) for t in self._tasks
+                if t.tag is not None]
+        rows.sort(key=lambda r: (r[1], r[2], r[0]))
+        return rows
 
     def place(self, task: _Task, res: _Resource) -> _Task:
         res.queue.append(task)
@@ -355,8 +373,8 @@ def run_1f1b(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
         for s in range(P - 1):
             ra, rb = route[(s, m)], route[(s + 1, m)]
             dur = spec.p2p(s, s + 1, ra, rb) + ov
-            xf[(s + 1, m)] = sim.task(dur)
-            xb[(s, m)] = sim.task(dur)
+            xf[(s + 1, m)] = sim.task(dur, tag=("PF", s, ra, rb, m))
+            xb[(s, m)] = sim.task(dur, tag=("PB", s, ra, rb, m))
 
     # per-worker ordered compute queues; the last backward splits into one
     # part per sync bucket so bucket k's all-reduce starts as soon as the
@@ -370,7 +388,7 @@ def run_1f1b(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
             if kind == "F":
                 if s > 0 and not cfg.overlap_comm:
                     sim.place(xf[(s, m)], res)
-                t = sim.place(sim.task(c.fwd + ov), res)
+                t = sim.place(sim.task(c.fwd + ov, tag=("F", s, r, m)), res)
                 fwd[(s, m)] = t
             else:
                 if s < P - 1 and not cfg.overlap_comm:
@@ -378,7 +396,8 @@ def run_1f1b(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
                 split = (n_buckets > 0 and cfg.overlap_comm
                          and i == len(ms) - 1)
                 k = n_buckets if split else 1
-                parts = [sim.place(sim.task(c.bwd / k + (ov if j == 0 else 0)),
+                parts = [sim.place(sim.task(c.bwd / k + (ov if j == 0 else 0),
+                                            tag=("B", s, r, m)),
                                    res)
                          for j in range(k)]
                 bwd[(s, m)] = parts[-1]
@@ -425,7 +444,7 @@ def run_1f1b(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
         ring = sim.resource(("ring", s))
         ar[s] = []
         for k, dur in enumerate(buckets):
-            t = sim.task(dur)
+            t = sim.task(dur, tag=("AR", s, k))
             if cfg.overlap_comm:
                 for r in range(spec.n_replicas[s]):
                     parts = bwd_last.get((s, r))
@@ -441,7 +460,8 @@ def run_1f1b(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
     for (s, r), ms in local.items():
         if not ms:
             continue
-        t = sim.place(sim.task(spec.cost[(s, r)].upd + ov), worker[(s, r)])
+        t = sim.place(sim.task(spec.cost[(s, r)].upd + ov, tag=("U", s, r)),
+                      worker[(s, r)])
         if s in ar:
             t.deps.append(ar[s][-1])
         upd_tasks[(s, r)] = t
@@ -463,7 +483,8 @@ def run_1f1b(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
         bwd_end=bwd_end, sync_end=sync_end,
         busy_per_micro=busy,
         period=_steady_period(spec, cfg),
-        n_tasks=sim.n_tasks)
+        n_tasks=sim.n_tasks,
+        timeline=sim.timeline() if cfg.record_timeline else None)
 
 
 def interleaved_order(P: int, v: int, w: int, M: int
@@ -540,10 +561,12 @@ def run_interleaved(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
                     m = ms[mi]
                     c = spec.cost[(w, r)]
                     if kind == "F":
-                        t = sim.place(sim.task(c.fwd / v + ov), workers[w])
+                        t = sim.place(sim.task(c.fwd / v + ov,
+                                               tag=("F", w, r, m)), workers[w])
                         fwd[(l, m, r)] = t
                     else:
-                        t = sim.place(sim.task(c.bwd / v + ov), workers[w])
+                        t = sim.place(sim.task(c.bwd / v + ov,
+                                               tag=("B", w, r, m)), workers[w])
                         bwd[(l, m, r)] = t
                         t.deps.append(fwd[(l, m, r)])
         else:
@@ -551,8 +574,10 @@ def run_interleaved(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
                 for l in range(L):
                     w = l % P
                     c = spec.cost[(w, r)]
-                    tf = sim.task(c.fwd / v + ov, prio=(1, m, l))
-                    tb = sim.task(c.bwd / v + ov, prio=(0, m, L - 1 - l))
+                    tf = sim.task(c.fwd / v + ov, prio=(1, m, l),
+                                  tag=("F", w, r, m))
+                    tb = sim.task(c.bwd / v + ov, prio=(0, m, L - 1 - l),
+                                  tag=("B", w, r, m))
                     sim.place(tf, workers[w])
                     sim.place(tb, workers[w])
                     fwd[(l, m, r)] = tf
@@ -564,14 +589,14 @@ def run_interleaved(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
                 if l > 0:
                     wa = (l - 1) % P
                     dur = spec.p2p(wa, w, r, r) + ov
-                    x = sim.task(dur)
+                    x = sim.task(dur, tag=("PF", wa, r, r, m))
                     sim.place(x, sim.resource(("lf", l, r)))
                     x.deps.append(fwd[(l - 1, m, r)])
                     fwd[(l, m, r)].deps.append(x)
                 if l < L - 1:
                     wb = (l + 1) % P
                     dur = spec.p2p(w, wb, r, r) + ov
-                    x = sim.task(dur)
+                    x = sim.task(dur, tag=("PB", w, r, r, m))
                     sim.place(x, sim.resource(("lb", l, r)))
                     x.deps.append(bwd[(l + 1, m, r)])
                     bwd[(l, m, r)].deps.append(x)
@@ -591,8 +616,8 @@ def run_interleaved(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
                 if l % P == s:
                     deps.append(bwd[(l, ms[-1], r)])
         ar[s] = []
-        for dur in buckets:
-            t = sim.task(dur)
+        for k, dur in enumerate(buckets):
+            t = sim.task(dur, tag=("AR", s, k))
             t.deps.extend(deps)
             sim.place(t, ring)
             ar[s].append(t)
@@ -602,7 +627,8 @@ def run_interleaved(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
         if not ms:
             continue
         for s in range(P):
-            t = sim.task(spec.cost[(s, r)].upd + ov, prio=(2, total, s))
+            t = sim.task(spec.cost[(s, r)].upd + ov, prio=(2, total, s),
+                         tag=("U", s, r))
             t.deps.extend(bwd[(l, ms[-1], r)] for l in range(L) if l % P == s)
             if s in ar:
                 t.deps.append(ar[s][-1])
@@ -624,7 +650,8 @@ def run_interleaved(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
     return PipelineResult(
         t_total=t_total, t_pp=max(bwd_end) if bwd_end else 0.0,
         bwd_end=bwd_end, sync_end=sync_end, busy_per_micro=busy,
-        period=_steady_period(spec, cfg), n_tasks=sim.n_tasks)
+        period=_steady_period(spec, cfg), n_tasks=sim.n_tasks,
+        timeline=sim.timeline() if cfg.record_timeline else None)
 
 
 def run_pipeline(spec: PipelineSpec, cfg: EngineConfig = DEFAULT_ENGINE

@@ -24,6 +24,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -197,6 +198,63 @@ class MPMDPipeline:
         self.params: Optional[List[Any]] = None
         self.opt_states: Optional[List[Any]] = None
         self._programs = [self._build_programs(st) for st in self.stages]
+        self._telemetry = None          # TelemetryBus (attach_telemetry)
+        self._injector = None           # telemetry.FaultInjector
+        self._tel_zones: List[str] = []
+        self._tel_step = 0
+
+    # --- telemetry (opt-in; zero overhead when detached) -----------------------
+
+    def attach_telemetry(self, bus, injector=None,
+                         zones: Optional[Sequence[str]] = None) -> None:
+        """Stream per-microbatch timings onto a ``telemetry.TelemetryBus``.
+
+        When attached, ``train_step`` times every per-stage forward /
+        backward program and inter-stage transfer (``block_until_ready``,
+        so timings are real, not dispatch) and emits the shared sample
+        schema — ``fwd_time``/``bwd_time`` keyed ``(stage, 0)``,
+        ``p2p_time`` keyed ``(stage, stage+1, 0, 0)``, per-stage
+        heartbeats, and ``step_time`` — then closes the step with
+        ``bus.end_step``.  ``zones`` labels each stage's pool in the
+        sample meta (defaults to ``stage<i>``) so detectors and the RCA
+        layer can map streams to cluster coordinates.  ``injector``
+        (a ``telemetry.FaultInjector``) perturbs the *real* pipeline:
+        active compute-delay/link-degrade faults matching a stage's zone
+        sleep the corresponding extra seconds, and hung stages stop
+        heartbeating — the chaos suite's hardware-free fault rig.
+        """
+        self._telemetry = bus
+        self._injector = injector
+        self._tel_zones = list(zones) if zones is not None else \
+            [f"stage{i}" for i in range(len(self.stages))]
+        self._tel_step = 0
+
+    def _emit(self, metric: str, key, value: float, **meta) -> None:
+        from repro.telemetry.bus import Sample, wall_clock
+        self._telemetry.emit(Sample(metric, key, wall_clock(),
+                                    self._tel_step, value, meta))
+
+    def _timed(self, fn, metric: str, key, zone: str, acc: str = "host",
+               **meta):
+        """Run ``fn``, block, emit its wall seconds; inject fault delay."""
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        if self._injector is not None:
+            if metric in ("fwd_time", "bwd_time"):
+                extra = self._injector.compute_delay_s(
+                    self._tel_step, zone, acc, dt)
+            elif metric == "p2p_time":
+                extra = dt * (self._injector.link_factor(
+                    self._tel_step, zone, meta.get("zone_b", "")) - 1.0)
+            else:
+                extra = 0.0
+            if extra > 0:
+                time.sleep(extra)
+                dt += extra
+        self._emit(metric, key, dt, zone=zone, acc_type=acc, **meta)
+        return out
 
     # --- per-stage jitted programs ---------------------------------------------
 
@@ -291,29 +349,70 @@ class MPMDPipeline:
         """Run one microbatch through every stage; keep per-stage inputs
         (backward recomputes the stage forward from them)."""
         inputs = []
+        tel = self._telemetry
         x = self._to_stage(0, tokens, None)
         for i, st in enumerate(self.stages):
             if i > 0:
-                x = self._to_stage(i, x, None, None)
+                if tel is not None:
+                    x = self._timed(
+                        lambda x=x, i=i: self._to_stage(i, x, None, None),
+                        "p2p_time", (i - 1, i, 0, 0),
+                        self._tel_zones[i - 1],
+                        zone_b=self._tel_zones[i])
+                else:
+                    x = self._to_stage(i, x, None, None)
             inputs.append(x)
-            x = self._programs[i]["fwd"](self.params[i], x)
+            if tel is not None:
+                x = self._timed(
+                    lambda i=i, x=x: self._programs[i]["fwd"](
+                        self.params[i], x),
+                    "fwd_time", (i, 0), self._tel_zones[i])
+            else:
+                x = self._programs[i]["fwd"](self.params[i], x)
         return {"inputs": inputs}
 
     def _backward_micro(self, ctx: Dict[str, Any], labels):
         """Reverse sweep; returns (loss, per-stage grads)."""
         n = len(self.stages)
+        tel = self._telemetry
         grads: List[Any] = [None] * n
         labels = self._to_stage(n - 1, labels, None)
-        loss, grads[n - 1], gx = self._programs[n - 1]["bwd"](
-            self.params[n - 1], ctx["inputs"][n - 1], labels)
+        if tel is not None:
+            loss, grads[n - 1], gx = self._timed(
+                lambda: self._programs[n - 1]["bwd"](
+                    self.params[n - 1], ctx["inputs"][n - 1], labels),
+                "bwd_time", (n - 1, 0), self._tel_zones[n - 1])
+        else:
+            loss, grads[n - 1], gx = self._programs[n - 1]["bwd"](
+                self.params[n - 1], ctx["inputs"][n - 1], labels)
         for i in range(n - 2, 0, -1):
-            gx = self._to_stage(i, gx, None, None)
-            grads[i], gx = self._programs[i]["bwd"](
-                self.params[i], ctx["inputs"][i], gx)
+            if tel is not None:
+                gx = self._timed(
+                    lambda gx=gx, i=i: self._to_stage(i, gx, None, None),
+                    "p2p_time", (i, i + 1, 0, 0), self._tel_zones[i],
+                    zone_b=self._tel_zones[i + 1])
+                grads[i], gx = self._timed(
+                    lambda i=i, gx=gx: self._programs[i]["bwd"](
+                        self.params[i], ctx["inputs"][i], gx),
+                    "bwd_time", (i, 0), self._tel_zones[i])
+            else:
+                gx = self._to_stage(i, gx, None, None)
+                grads[i], gx = self._programs[i]["bwd"](
+                    self.params[i], ctx["inputs"][i], gx)
         if n > 1:
-            gx = self._to_stage(0, gx, None, None)
-            grads[0] = self._programs[0]["bwd"](
-                self.params[0], ctx["inputs"][0], gx)
+            if tel is not None:
+                gx = self._timed(
+                    lambda: self._to_stage(0, gx, None, None),
+                    "p2p_time", (0, 1, 0, 0), self._tel_zones[0],
+                    zone_b=self._tel_zones[1])
+                grads[0] = self._timed(
+                    lambda gx=gx: self._programs[0]["bwd"](
+                        self.params[0], ctx["inputs"][0], gx),
+                    "bwd_time", (0, 0), self._tel_zones[0])
+            else:
+                gx = self._to_stage(0, gx, None, None)
+                grads[0] = self._programs[0]["bwd"](
+                    self.params[0], ctx["inputs"][0], gx)
         return loss, grads
 
     def train_step(self, batch: Dict[str, Any]) -> float:
@@ -328,6 +427,7 @@ class MPMDPipeline:
         if self.params is None:
             raise RuntimeError("load parameters first (full_params_like / "
                                "init_params)")
+        t_start = time.perf_counter()
         tokens, labels = batch["tokens"], batch["labels"]
         num_micro = tokens.shape[0]
         n = len(self.stages)
@@ -357,4 +457,18 @@ class MPMDPipeline:
             self.params[i], self.opt_states[i], _ = \
                 self._programs[i]["update"](self.params[i],
                                             self.opt_states[i], g)
-        return float(np.sum(jax.device_get(losses)) * inv)
+        out = float(np.sum(jax.device_get(losses)) * inv)
+        if self._telemetry is not None:
+            from repro.telemetry.bus import wall_clock
+            for i in range(n):
+                zone = self._tel_zones[i]
+                if self._injector is None or \
+                        not self._injector.hung(self._tel_step, zone, "host"):
+                    self._emit("heartbeat", (i, 0), 1.0, zone=zone,
+                               acc_type="host",
+                               chips=self.stages[i].n_devices)
+            self._emit("step_time", (),
+                       time.perf_counter() - t_start)
+            self._telemetry.end_step(self._tel_step, wall_clock())
+            self._tel_step += 1
+        return out

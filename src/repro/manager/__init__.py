@@ -7,18 +7,19 @@ back, or defer).  See DESIGN.md §11.
 from repro.manager.controller import (Controller, ControllerConfig,
                                       fit_runtime_plan)
 from repro.manager.events import (CapacityDown, CapacityUp, ClusterEvent,
-                                  EventBus, NodeFailure, PriceChange,
-                                  Straggler)
+                                  EventBus, LinkDegraded, NodeFailure,
+                                  PriceChange, Straggler)
 from repro.manager.monitor import AvailabilityMonitor, ListFeed, TraceFeed
 from repro.manager.replan import IncrementalReplanner
-from repro.manager.transition import (DEFER, RESHARD, ROLLBACK,
+from repro.manager.transition import (DEFER, RESHARD, ROLLBACK, ROUTE_AROUND,
                                       TransitionConfig, TransitionDecision,
                                       TransitionModel)
 
 __all__ = [
     "AvailabilityMonitor", "CapacityDown", "CapacityUp", "ClusterEvent",
     "Controller", "ControllerConfig", "DEFER", "EventBus",
-    "IncrementalReplanner", "ListFeed", "NodeFailure", "PriceChange",
-    "RESHARD", "ROLLBACK", "Straggler", "TraceFeed", "TransitionConfig",
-    "TransitionDecision", "TransitionModel", "fit_runtime_plan",
+    "IncrementalReplanner", "LinkDegraded", "ListFeed", "NodeFailure",
+    "PriceChange", "RESHARD", "ROLLBACK", "ROUTE_AROUND", "Straggler",
+    "TraceFeed", "TransitionConfig", "TransitionDecision", "TransitionModel",
+    "fit_runtime_plan",
 ]

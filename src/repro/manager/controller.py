@@ -35,10 +35,11 @@ from repro.core.planner.plan import ParallelPlan
 from repro.core.planner.search import PlanResult, plan_fits
 from repro.core.profiler.analytic import DTYPE_BYTES
 from repro.manager.events import (CapacityDown, CapacityUp, ClusterEvent,
-                                  NodeFailure, PriceChange, Straggler)
+                                  LinkDegraded, NodeFailure, PriceChange,
+                                  Straggler)
 from repro.manager.monitor import AvailabilityMonitor
 from repro.manager.replan import IncrementalReplanner
-from repro.manager.transition import (DEFER, RESHARD, ROLLBACK,
+from repro.manager.transition import (DEFER, RESHARD, ROLLBACK, ROUTE_AROUND,
                                       TransitionDecision, TransitionModel)
 from repro.train.elastic import ElasticTrainer, RuntimePlan
 
@@ -70,6 +71,9 @@ class ControllerConfig:
     replan_on_straggler: bool = True
     # objective used for PriceChange-triggered replans; None = default
     price_objective: Optional[Objective] = None
+    # stream every decision to this JSONL file (same trace format as the
+    # telemetry bus export — one control-plane format end to end)
+    audit_path: Optional[str] = None
 
 
 class Controller:
@@ -89,7 +93,80 @@ class Controller:
         self.pending: Optional[Dict[str, Any]] = None        # capacity gain
         self.pending_price: Optional[Dict[str, Any]] = None  # price gain
         self._committed: Optional[PlanResult] = None
+        self.audit = None               # JsonlWriter when audit_path set
+        if config.audit_path:
+            from repro.telemetry.bus import JsonlWriter
+            self.audit = JsonlWriter(config.audit_path)
+        self.telemetry = None           # TelemetryBus (attach_telemetry)
+        self.det_bank = None            # telemetry.DetectorBank
+        self.rca = None                 # telemetry.RootCauseAnalyzer
+        self._polling = False           # suppress subscriber re-entry
+        self._tel_events: List[ClusterEvent] = []   # detector-sourced queue
         trainer.plan_fn = self._plan_fn
+
+    # --- telemetry wiring -----------------------------------------------------
+    def attach_telemetry(self, bus, det_cfg=None,
+                         heartbeat_miss: int = 3) -> None:
+        """Wire a :class:`~repro.telemetry.bus.TelemetryBus` into the loop:
+        the trainer emits runtime samples onto ``bus``, a ``DetectorBank``
+        turns sustained deviations into typed events on the manager bus,
+        and ``RootCauseAnalyzer`` verdicts steer the transition decision
+        (``root_cause``) when those events are handled after each step."""
+        from repro.telemetry.detectors import DetectorBank, DetectorConfig
+        from repro.telemetry.rca import RootCauseAnalyzer
+        self.telemetry = bus
+        self.det_bank = DetectorBank(
+            bus, self.bus, monitor=self.monitor,
+            cfg=det_cfg or DetectorConfig(), heartbeat_miss=heartbeat_miss)
+        self.rca = RootCauseAnalyzer(self.det_bank)
+        self.trainer.telemetry = bus
+        # sample/event timestamps on the sim clock, so detector events
+        # interleave time-ordered with feed events on the manager bus
+        self.trainer.clock = lambda: self.sim_time
+        self.bus.subscribe(self._on_telemetry_event)
+
+    def _on_telemetry_event(self, ev: ClusterEvent) -> None:
+        """Bus subscriber: queue detector-sourced events for handling after
+        the in-flight step completes (acting mid-step would reconfigure the
+        trainer underneath its own loop).  Feed-sourced events arrive while
+        ``run`` drains ``monitor.poll`` (``_polling``) and are handled
+        there; ``_after_step`` stragglers carry a cluster snapshot —
+        detector events don't, which is how we tell them apart."""
+        if self._polling or self.rca is None:
+            return
+        detector_sourced = (
+            isinstance(ev, NodeFailure) or
+            (isinstance(ev, (LinkDegraded, Straggler))
+             and ev.cluster is None))
+        if detector_sourced:
+            self._tel_events.append(ev)
+
+    def _drain_telemetry_events(self) -> None:
+        evs, self._tel_events = self._tel_events, []
+        for ev in evs:
+            if isinstance(ev, NodeFailure):
+                # monitor.observe_failure already shrank the snapshot;
+                # price the mandatory move like any feed-sourced failure
+                self._handle(ev)
+                continue
+            verdict = self.rca.classify(ev)
+            cluster = self.monitor.current
+            res = self.replanner.replan(cluster)
+            dec = self._decide(
+                cluster, mandatory=False, state_lost=False,
+                t_new=res.best.t_iter if res.best else None,
+                root_cause=verdict.kind)
+            if dec.kind in (RESHARD, ROUTE_AROUND):
+                self._commit(ev, cluster, self._n_devices(cluster), res,
+                             dec, root_cause=verdict.kind)
+            else:
+                self._record(ev, dec.kind, dec.reason, res,
+                             root_cause=verdict.kind,
+                             remediation=verdict.remediation)
+        if evs and self.det_bank is not None:
+            # detections are episodic: whatever was decided, the baselines
+            # that produced them are stale now — start the bank fresh
+            self.det_bank.reset()
 
     # --- runtime mapping ------------------------------------------------------
     def _n_devices(self, cluster: ClusterSpec) -> int:
@@ -128,7 +205,8 @@ class Controller:
     def _decide(self, cluster: ClusterSpec, *, mandatory: bool,
                 state_lost: bool, t_new: Optional[float],
                 t_old: Optional[float] = None,
-                event_age_s: float = 0.0) -> TransitionDecision:
+                event_age_s: float = 0.0,
+                root_cause: Optional[str] = None) -> TransitionDecision:
         best = self._committed.best if self._committed else None
         t_iter_old = t_old if t_old is not None else \
             (best.t_iter if best else 1.0)
@@ -140,12 +218,12 @@ class Controller:
             steps_since_ckpt=self.trainer.step % max(
                 1, self.trainer.checkpoint_every),
             t_iter_old_s=t_iter_old, t_iter_new_s=t_new,
-            event_age_s=event_age_s)
+            event_age_s=event_age_s, root_cause=root_cause)
 
     def _record(self, event: Optional[ClusterEvent], action: str,
                 reason: str, result: Optional[PlanResult] = None,
                 **extra) -> None:
-        self.decisions.append({
+        rec = {
             "time_s": self.sim_time, "step": self.trainer.step,
             "event": event.describe() if event else "-",
             "action": action, "reason": reason,
@@ -153,7 +231,12 @@ class Controller:
             else 0,
             "cache": result.stats.get("cache") if result else None,
             "search_ms": result.search_time_s * 1e3 if result else None,
-            **extra})
+            **extra}
+        self.decisions.append(rec)
+        if self.audit is not None:
+            from repro.telemetry.bus import wall_clock
+            self.audit.write({"kind": "decision",
+                              "wall_time_s": wall_clock(), **rec})
 
     # --- event handling -------------------------------------------------------
     def _handle(self, ev: ClusterEvent) -> None:
@@ -253,7 +336,7 @@ class Controller:
 
     def _commit(self, ev: Optional[ClusterEvent], cluster: ClusterSpec,
                 n_new: int, res: PlanResult,
-                dec: TransitionDecision) -> None:
+                dec: TransitionDecision, **extra) -> None:
         self._committed = res
         # whatever gains were pending were computed against the state this
         # commit just replaced — stale, so drop them (fresh events re-open)
@@ -262,7 +345,7 @@ class Controller:
         self.trainer.on_availability_change(
             n_new, failure=dec.kind == ROLLBACK)
         self._record(ev, dec.kind, dec.reason, res,
-                     transition_cost_s=dec.cost_s)
+                     transition_cost_s=dec.cost_s, **extra)
 
     def _commit_pending_if_due(self) -> None:
         for attr in ("pending", "pending_price"):
@@ -330,10 +413,15 @@ class Controller:
         if self.trainer.mesh is None:
             self.start()
         for _ in range(num_steps):
-            for ev in self.monitor.poll(self.sim_time):
-                self._handle(ev)
+            self._polling = True
+            try:
+                for ev in self.monitor.poll(self.sim_time):
+                    self._handle(ev)
+            finally:
+                self._polling = False
             self._commit_pending_if_due()
             self.trainer.train(1)
+            self._drain_telemetry_events()
             self._after_step()
             self.sim_time += self.config.step_time_s
         self.trainer.ckpt.wait()

@@ -91,16 +91,51 @@ class Straggler(ClusterEvent):
                 f"{self.t_median_s * 1e3:.0f}ms")
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkDegraded(ClusterEvent):
+    """Sustained p2p/collective latency elevation on one link.
+
+    Raised by the telemetry detectors (``telemetry/detectors.py``) when a
+    per-boundary transfer stream stays above its robust baseline —
+    ``observed_s`` vs ``baseline_s`` for the affected ``boundary`` (the
+    pipeline-stage index the stream crosses; -1 when unknown)."""
+    zone_a: str = ""
+    zone_b: str = ""
+    boundary: int = -1
+    observed_s: float = 0.0
+    baseline_s: float = 0.0
+
+    @property
+    def factor(self) -> float:
+        return self.observed_s / max(self.baseline_s, 1e-12)
+
+    def describe(self) -> str:
+        return (f"LinkDegraded@{self.time_s:.0f}s {self.zone_a}->"
+                f"{self.zone_b} boundary {self.boundary} "
+                f"{self.observed_s * 1e3:.1f}ms vs "
+                f"{self.baseline_s * 1e3:.1f}ms ({self.factor:.1f}x)")
+
+
 class EventBus:
     """Ordered pub/sub.  Publishes are delivered to subscribers immediately
-    and appended to ``log``; ordering is publish order, with ``publish``
-    rejecting a time earlier than the last published (feeds are merged
-    time-sorted upstream, so a violation is a programming error)."""
+    and appended to ``log``; ``publish`` rejects a time earlier than the
+    last published (feeds are merged time-sorted upstream, so a violation
+    is a programming error).
+
+    Ordering contract (chaos runs depend on byte-reproducibility): events
+    are totally ordered by ``(time_s, seq)`` where ``seq`` is the
+    monotonically increasing publish sequence number — i.e. ties on
+    ``time_s`` break by *insertion order*, stably, for ``log``,
+    ``of_type`` and subscriber delivery alike.  ``publish`` returns the
+    assigned ``seq``; pinned by ``tests/test_telemetry.py``.
+    """
 
     def __init__(self):
         self.log: List[ClusterEvent] = []
+        self.seqs: List[int] = []        # seq of log[i] (parallel list)
         self._subs: List[Dict] = []
         self._last_t = float("-inf")
+        self._next_seq = 0
 
     def subscribe(self, handler: Callable[[ClusterEvent], None],
                   event_type: Optional[Type[ClusterEvent]] = None) -> None:
@@ -108,16 +143,20 @@ class EventBus:
         instances of ``event_type``)."""
         self._subs.append({"fn": handler, "type": event_type})
 
-    def publish(self, event: ClusterEvent) -> None:
+    def publish(self, event: ClusterEvent) -> int:
         if event.time_s < self._last_t:
             raise ValueError(
                 f"event bus requires time-ordered publishes: "
                 f"{event.time_s} < {self._last_t}")
         self._last_t = event.time_s
+        seq = self._next_seq
+        self._next_seq += 1
         self.log.append(event)
+        self.seqs.append(seq)
         for sub in self._subs:
             if sub["type"] is None or isinstance(event, sub["type"]):
                 sub["fn"](event)
+        return seq
 
     def of_type(self, event_type: Type[ClusterEvent]) -> List[ClusterEvent]:
         return [e for e in self.log if isinstance(e, event_type)]

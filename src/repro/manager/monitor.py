@@ -120,6 +120,24 @@ class AvailabilityMonitor:
             self.bus.publish(e)
         return events
 
+    # --- detector-driven failures (telemetry path) ----------------------------
+    def observe_failure(self, t: float, zone: str, acc_type: str,
+                        lost: int) -> NodeFailure:
+        """A *detected* failure (missed heartbeats, ``telemetry``
+        detectors) rather than a feed-diffed one: shrink the current
+        snapshot by ``lost`` chips and publish ``NodeFailure`` with the
+        post-event cluster, exactly like a feed-sourced bulk preemption —
+        so controller handling and audit are identical for both paths."""
+        old = self.current.zone(zone).capacity.get(acc_type, 0)
+        lost = max(0, min(int(lost), old))
+        new = old - lost
+        cluster = self.current.with_capacity({(zone, acc_type): new})
+        ev = NodeFailure(time_s=t, cluster=cluster, zone=zone,
+                         acc_type=acc_type, available=new, lost=lost)
+        self.current = cluster
+        self.bus.publish(ev)
+        return ev
+
     def _price_events(self, t: float,
                       cluster: ClusterSpec) -> List[ClusterEvent]:
         return [PriceChange(time_s=t, cluster=cluster, zone=zone,

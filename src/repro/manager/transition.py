@@ -32,6 +32,7 @@ from repro.core.simulator import network
 RESHARD = "reshard"
 ROLLBACK = "rollback"
 DEFER = "defer"
+ROUTE_AROUND = "route-around"   # reshard variant: move off a slow pool/link
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +78,8 @@ class TransitionModel:
                state_bytes: float, link: LinkSpec, movers: int,
                steps_since_ckpt: int, t_iter_old_s: float,
                t_iter_new_s: Optional[float],
-               event_age_s: float = 0.0) -> TransitionDecision:
+               event_age_s: float = 0.0,
+               root_cause: Optional[str] = None) -> TransitionDecision:
         """Pick the cheapest sound outcome for one proposed transition.
 
         ``mandatory``: capacity shrank below what the job runs on.
@@ -86,9 +88,23 @@ class TransitionModel:
         (None when the replanner found nothing — with spare capacity gone
         the job just continues as-is unless the move is mandatory).
         ``event_age_s``: how long the triggering state has persisted.
+        ``root_cause``: RCA verdict kind (``telemetry.rca``), when the
+        transition was triggered by a telemetry detector rather than an
+        availability feed.  A ``data-stall`` verdict defers outright —
+        reconfiguring the job cannot feed the input pipeline faster — and
+        a ``slow-chip``/``slow-link`` verdict returns ``ROUTE_AROUND``
+        with the persistence gate waived: the detector's own persistence
+        + cooldown already established that the degradation is sustained.
         """
         reshard = self.reshard_cost_s(state_bytes, link, movers)
         details = {"reshard_cost_s": reshard}
+        if root_cause is not None:
+            details["root_cause"] = root_cause
+        if root_cause == "data-stall":
+            return TransitionDecision(
+                DEFER, 0.0,
+                "data stall: reconfiguration cannot help the input pipeline",
+                details)
         if state_lost:
             cost = self.rollback_cost_s(state_bytes, steps_since_ckpt,
                                         t_iter_old_s)
@@ -110,6 +126,14 @@ class TransitionModel:
             return TransitionDecision(
                 DEFER, 0.0,
                 f"gain {gain:.1f}s over horizon < reshard {reshard:.1f}s",
+                details)
+        if root_cause in ("slow-chip", "slow-link"):
+            return TransitionDecision(
+                ROUTE_AROUND, reshard,
+                f"{root_cause}: route around the degraded "
+                f"{'pool' if root_cause == 'slow-chip' else 'link'} "
+                f"(gain {gain:.1f}s over horizon clears reshard "
+                f"{reshard:.1f}s; detector persistence waives hysteresis)",
                 details)
         # ... and the persistence gate (anti-thrash)
         if event_age_s < self.cfg.hysteresis_s:

@@ -77,7 +77,8 @@ class ElasticTrainer:
     def __init__(self, cfg: ModelConfig, opt_cfg: opt_lib.OptimizerConfig,
                  data_cfg: data_lib.DataConfig, workdir: str,
                  checkpoint_every: int = 20,
-                 plan_fn: Optional[Callable[[int], RuntimePlan]] = None):
+                 plan_fn: Optional[Callable[[int], RuntimePlan]] = None,
+                 telemetry=None):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
         self.data_cfg = data_cfg
@@ -86,6 +87,15 @@ class ElasticTrainer:
         self.checkpoint_every = checkpoint_every
         self.plan_fn = plan_fn or self._default_plan
         self.detector = StragglerDetector()
+        # optional telemetry.TelemetryBus: the step loop then emits
+        # step_time / data_stall / heartbeat samples and closes each step
+        # with end_step, feeding the control plane's online detectors
+        # alongside (not instead of) the in-loop StragglerDetector.
+        self.telemetry = telemetry
+        # telemetry timestamps come from this clock; the manager's
+        # controller pins it to its sim clock so bus events interleave
+        # time-ordered with feed events (None = wall clock).
+        self.clock: Optional[Callable[[], float]] = None
         self.log: List[Dict[str, Any]] = []
         self.reconfigs: List[Dict[str, Any]] = []
 
@@ -178,6 +188,21 @@ class ElasticTrainer:
             "n_devices": n_devices, "kind": kind,
             "reconfig_s": time.perf_counter() - t0})
 
+    # --- telemetry -------------------------------------------------------------------
+    def _emit_telemetry(self, step_s: float, data_s: float) -> None:
+        """One step's samples onto the attached bus (no-op when detached)."""
+        if self.telemetry is None:
+            return
+        from repro.telemetry.bus import Sample, wall_clock
+        t = self.clock() if self.clock is not None else wall_clock()
+        emit = self.telemetry.emit
+        emit(Sample("step_time", (), t, self.step, step_s))
+        emit(Sample("data_stall", (), t, self.step, data_s))
+        emit(Sample("heartbeat", (0, 0), t, self.step, 1.0,
+                    {"zone": "local", "acc_type": "host",
+                     "chips": self.plan.n_devices if self.plan else 0}))
+        self.telemetry.end_step(self.step, t)
+
     # --- training -------------------------------------------------------------------
     def train(self, num_steps: int,
               events: Sequence[Tuple[int, int, bool]] = ()) -> List[Dict]:
@@ -196,7 +221,9 @@ class ElasticTrainer:
             if self.step in ev:
                 for n, failure in ev.pop(self.step):
                     self.on_availability_change(n, failure)
+            t_data = time.perf_counter()
             batch = self.data.batch(self.step)
+            t_data = time.perf_counter() - t_data      # input-pipeline wait
             with jax.set_mesh(self.mesh):
                 t0 = time.perf_counter()
                 self.params, self.opt_state, metrics = self.step_fn(
@@ -209,6 +236,7 @@ class ElasticTrainer:
                    "n_devices": self.plan.n_devices,
                    "straggler_flag": straggler}
             self.log.append(rec)
+            self._emit_telemetry(dt, t_data)
             self.step += 1
             if self.step % self.checkpoint_every == 0:
                 self.ckpt.save(self.step, {

@@ -1,0 +1,526 @@
+"""Telemetry bus, online detectors, RCA, fault injection, chaos loop."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import multi_zone, single_zone
+from repro.core.profiler.analytic import TrainJob
+from repro.manager.events import (CapacityUp, EventBus, LinkDegraded,
+                                  NodeFailure, Straggler)
+from repro.manager.monitor import AvailabilityMonitor
+from repro.telemetry import (EXPECTED_VERDICT, ChaosHarness, DetectorBank,
+                             DetectorConfig, FaultInjector, FaultSpec,
+                             HeartbeatDetector, JsonlWriter, RootCauseAnalyzer,
+                             Sample, StreamDetector, TelemetryBus,
+                             degrade_link, read_jsonl)
+from repro.telemetry import rca as rca_mod
+
+from tests.helpers import run_py
+
+GEO = multi_zone({
+    "us-central1-a": ("us-central1", {"A100-40": 16}),
+    "us-west1-a":    ("us-west1",    {"A100-40": 16}),
+})
+
+
+def _job():
+    return TrainJob(cfg=get_config("smollm_360m"), seq_len=512,
+                    global_batch=64)
+
+
+# --- bus ---------------------------------------------------------------------
+def test_bus_rings_are_bounded():
+    bus = TelemetryBus(capacity=4)
+    for i in range(10):
+        bus.emit(Sample("step_time", (), float(i), i, 0.1 * i))
+    assert bus.n_samples == 10
+    assert bus.values("step_time", ()) == pytest.approx([0.6, 0.7, 0.8, 0.9])
+    assert bus.latest("step_time", ()).step == 9
+    assert bus.series("fwd_time", (0, 0)) == []
+
+
+def test_bus_subscribe_and_step_boundaries():
+    bus = TelemetryBus()
+    all_s, fwd_s, steps = [], [], []
+    bus.subscribe(all_s.append)
+    bus.subscribe(fwd_s.append, metric="fwd_time")
+    bus.on_step(lambda step, t: steps.append((step, t)))
+    bus.emit(Sample("fwd_time", (0, 0), 1.0, 0, 0.5))
+    bus.emit(Sample("step_time", (), 1.0, 0, 1.5))
+    bus.end_step(0, 1.0)
+    assert len(all_s) == 2 and len(fwd_s) == 1
+    assert fwd_s[0].metric == "fwd_time"
+    assert steps == [(0, 1.0)]
+    assert bus.keys("fwd_time") == [(0, 0)]
+
+
+def test_bus_jsonl_export_and_streaming(tmp_path):
+    export = tmp_path / "trace.jsonl"
+    stream = tmp_path / "stream.jsonl"
+    bus = TelemetryBus(writer=JsonlWriter(str(stream)))
+    # emitted out of time order on purpose: export must sort
+    bus.emit(Sample("step_time", (), 2.0, 1, 0.2))
+    bus.emit(Sample("fwd_time", (0, 0), 1.0, 0, 0.1, {"zone": "z"}))
+    n = bus.export_jsonl(str(export))
+    assert n == 2
+    recs = read_jsonl(str(export))
+    assert [r["time_s"] for r in recs] == [1.0, 2.0]
+    assert recs[0]["meta"] == {"zone": "z"}
+    assert all(r["kind"] == "sample" for r in recs)
+    # the streaming writer saw them in emission order
+    raw = read_jsonl(str(stream))
+    assert [r["time_s"] for r in raw] == [2.0, 1.0]
+    assert json.loads((stream).read_text().splitlines()[0])["step"] == 1
+
+
+# --- event bus tie-break (satellite) -----------------------------------------
+def test_event_bus_same_timestamp_insertion_order():
+    """Simultaneous events are totally ordered by insertion: chaos-run
+    byte-reproducibility depends on this tie-break staying stable."""
+    bus = EventBus()
+    seen = []
+    bus.subscribe(seen.append)
+    a = CapacityUp(time_s=5.0, zone="za", acc_type="x", available=4, delta=2)
+    b = NodeFailure(time_s=5.0, zone="zb", acc_type="x", available=0, lost=4)
+    c = Straggler(time_s=5.0, step=3, t_step_s=2.0, t_median_s=1.0)
+    seq_a, seq_b, seq_c = bus.publish(a), bus.publish(b), bus.publish(c)
+    assert [seq_a, seq_b, seq_c] == sorted([seq_a, seq_b, seq_c])
+    assert bus.log == [a, b, c]              # insertion order, stably
+    assert seen == [a, b, c]                 # delivery order matches
+    assert bus.seqs == [seq_a, seq_b, seq_c]
+    # total order is (time_s, seq): later publish at same time sorts after
+    assert sorted(zip(bus.log, bus.seqs),
+                  key=lambda p: (p[0].time_s, p[1])) == \
+        list(zip(bus.log, bus.seqs))
+
+
+# --- detectors ---------------------------------------------------------------
+def _cfg(**kw):
+    return DetectorConfig(**kw)
+
+
+def test_detector_warmup_is_silent():
+    det = StreamDetector(_cfg(warmup=12))
+    for i in range(12):
+        # wild values during warmup must not fire
+        assert det.observe(i, float(i), 1.0 + (i % 3) * 5.0) is None
+    assert det.n_events == 0
+
+
+def test_detector_single_spike_no_event():
+    det = StreamDetector()
+    for i in range(30):
+        assert det.observe(i, float(i), 0.1) is None
+    assert det.observe(30, 30.0, 1.0) is None      # 10x, one sample
+    # the spike never entered the baseline window
+    assert det.median() == pytest.approx(0.1)
+    for i in range(31, 60):
+        assert det.observe(i, float(i), 0.1) is None
+    assert det.n_events == 0
+
+
+def test_detector_sustained_degradation_fires_once():
+    cfg = _cfg(persist=3)
+    det = StreamDetector(cfg)
+    for i in range(20):
+        det.observe(i, float(i), 0.1)
+    events = [det.observe(20 + j, 20.0 + j, 0.25) for j in range(10)]
+    fired = [e for e in events if e is not None]
+    assert len(fired) == 1
+    assert events[cfg.persist - 1] is not None     # at persistence, not 1st
+    an = fired[0]
+    assert an.factor == pytest.approx(2.5, rel=0.05)
+    assert an.baseline == pytest.approx(0.1, rel=0.05)
+    assert det.state == "degraded"
+    assert det.n_events == 1
+
+
+def test_detector_oscillation_hysteresis():
+    """Values oscillating above the release threshold keep the stream
+    degraded (no flapping, no second event); sustained recovery below
+    ``release_rel * baseline`` releases it, and cooldown blocks an
+    immediate re-fire."""
+    cfg = _cfg(persist=3, release_rel=1.15, cooldown=20)
+    det = StreamDetector(cfg)
+    for i in range(20):
+        det.observe(i, float(i), 0.1)
+    for j in range(3):
+        det.observe(20 + j, 20.0 + j, 0.3)
+    assert det.state == "degraded" and det.n_events == 1
+    # oscillate between 0.3 and 0.13 (> 0.115 release line): stays stuck
+    for j in range(10):
+        x = 0.3 if j % 2 else 0.13
+        assert det.observe(23 + j, 23.0 + j, x) is None
+    assert det.state == "degraded"
+    # sustained recovery releases after `persist` calm samples
+    for j in range(cfg.persist):
+        det.observe(40 + j, 40.0 + j, 0.1)
+    assert det.state == "healthy"
+    # cooldown: an immediate new degradation cannot fire for `cooldown`
+    for j in range(cfg.cooldown // 2):
+        assert det.observe(50 + j, 50.0 + j, 0.4) is None
+    assert det.n_events == 1
+
+
+def test_detector_zero_false_positives_500_noisy_steps():
+    """4% lognormal step-time noise for 500 steps: no events (the chaos
+    clean-run property, pinned at detector level with a fixed seed)."""
+    rng = np.random.default_rng(7)
+    det = StreamDetector()
+    for i in range(500):
+        x = 0.1 * float(np.exp(rng.normal(0.0, 0.04)))
+        assert det.observe(i, float(i), x) is None
+    assert det.n_events == 0
+
+
+def test_heartbeat_detector_fires_once_per_silence():
+    hb = HeartbeatDetector(miss_limit=3)
+    for s in range(5):
+        hb.beat((0, 0), s, {"zone": "z"})
+        hb.beat((1, 0), s, {"zone": "z"})
+    assert hb.missing(6) == []                     # only 2 steps silent
+    missing = hb.missing(7)                        # 3 steps silent: both
+    assert sorted(k for k, _ in missing) == [(0, 0), (1, 0)]
+    assert hb.missing(8) == []                     # fired once, stays quiet
+    hb.beat((0, 0), 9, {"zone": "z"})              # back alive
+    assert [k for k, _ in hb.missing(12)] == [(0, 0)]
+
+
+# --- detector bank -----------------------------------------------------------
+def _feed(bus, streams, start, n):
+    """Emit ``streams = {(metric, key): value_fn(step)}`` with meta, and
+    close each step."""
+    for step in range(start, start + n):
+        t = float(step)
+        for (metric, key), spec in streams.items():
+            fn, meta = spec
+            bus.emit(Sample(metric, key, t, step, fn(step), meta))
+        bus.end_step(step, t)
+
+
+def test_bank_maps_streams_to_typed_events():
+    bus = TelemetryBus()
+    events = EventBus()
+    bank = DetectorBank(bus, events)
+    base = {
+        ("fwd_time", (0, 0)): (lambda s: 0.10, {"zone": "za",
+                                                "acc_type": "A100-40"}),
+        ("p2p_time", (0, 1, 0, 0)): (lambda s: 0.02,
+                                     {"zone": "za", "zone_b": "zb"}),
+        ("step_time", ()): (lambda s: 0.3, {}),
+    }
+    _feed(bus, base, 0, 20)
+    assert events.log == []
+    # p2p degrades 8x -> LinkDegraded with link coordinates
+    hot = dict(base)
+    hot[("p2p_time", (0, 1, 0, 0))] = (lambda s: 0.16,
+                                       {"zone": "za", "zone_b": "zb"})
+    _feed(bus, hot, 20, 5)
+    links = events.of_type(LinkDegraded)
+    assert len(links) == 1
+    ev = links[0]
+    assert (ev.zone_a, ev.zone_b, ev.boundary) == ("za", "zb", 0)
+    assert ev.factor == pytest.approx(8.0, rel=0.1)
+    # compute degrades -> Straggler
+    hot2 = dict(base)
+    hot2[("fwd_time", (0, 0))] = (lambda s: 0.5, {"zone": "za",
+                                                  "acc_type": "A100-40"})
+    bank.reset()
+    _feed(bus, base, 25, 15)
+    _feed(bus, hot2, 40, 5)
+    assert len(events.of_type(Straggler)) == 1
+
+
+def test_bank_heartbeat_loss_shrinks_monitor_snapshot():
+    cluster = single_zone("A100-40", 8)
+    bus = TelemetryBus()
+    events = EventBus()
+    monitor = AvailabilityMonitor(cluster, feeds=[], bus=events)
+    DetectorBank(bus, events, monitor=monitor, heartbeat_miss=3)
+    meta = {"zone": "us-central1-a", "acc_type": "A100-40", "chips": 4}
+    for step in range(5):
+        bus.emit(Sample("heartbeat", (0, 0), float(step), step, 1.0, meta))
+        bus.end_step(step, float(step))
+    for step in range(5, 9):                      # silence
+        bus.end_step(step, float(step))
+    fails = events.of_type(NodeFailure)
+    assert len(fails) == 1
+    assert fails[0].lost == 4
+    assert monitor.current.zone("us-central1-a").capacity["A100-40"] == 4
+    assert fails[0].cluster is monitor.current
+
+
+# --- RCA ---------------------------------------------------------------------
+def _bank_with(base_overrides=None, hot_overrides=None, n_base=20, n_hot=5):
+    bus = TelemetryBus()
+    events = EventBus()
+    bank = DetectorBank(bus, events)
+    base = {
+        ("fwd_time", (0, 0)): (lambda s: 0.10, {"zone": "za",
+                                                "acc_type": "A100-40"}),
+        ("p2p_time", (0, 1, 0, 0)): (lambda s: 0.02,
+                                     {"zone": "za", "zone_b": "zb"}),
+        ("data_stall", ()): (lambda s: 0.0, {}),
+        ("step_time", ()): (lambda s: 0.3, {}),
+    }
+    base.update(base_overrides or {})
+    hot = dict(base)
+    hot.update(hot_overrides or {})
+    _feed(bus, base, 0, n_base)
+    _feed(bus, hot, n_base, n_hot)
+    return bank, events
+
+
+def test_rca_slow_chip():
+    bank, events = _bank_with(hot_overrides={
+        ("fwd_time", (0, 0)): (lambda s: 0.4, {"zone": "za",
+                                               "acc_type": "A100-40"}),
+        ("step_time", ()): (lambda s: 0.6, {}),
+    })
+    verdict = RootCauseAnalyzer(bank).classify(events.log[0])
+    assert verdict.kind == rca_mod.SLOW_CHIP
+    assert verdict.target == (0, 0)
+    assert verdict.remediation == "route-around"
+    assert verdict.factor > 2.0
+
+
+def test_rca_slow_link():
+    bank, events = _bank_with(hot_overrides={
+        ("p2p_time", (0, 1, 0, 0)): (lambda s: 0.2,
+                                     {"zone": "za", "zone_b": "zb"}),
+        ("step_time", ()): (lambda s: 0.5, {}),
+    })
+    verdict = RootCauseAnalyzer(bank).classify(events.log[0])
+    assert verdict.kind == rca_mod.SLOW_LINK
+    assert verdict.target == (0, 1, 0, 0)
+    assert verdict.remediation == "route-around"
+
+
+def test_rca_data_stall_and_unknown():
+    # step time up, compute and p2p flat: the input pipeline is starving
+    bank, _ = _bank_with(hot_overrides={
+        ("data_stall", ()): (lambda s: 0.3, {}),
+        ("step_time", ()): (lambda s: 0.6, {}),
+    })
+    verdict = RootCauseAnalyzer(bank).classify()
+    assert verdict.kind == rca_mod.DATA_STALL
+    assert verdict.remediation == "defer"
+    # nothing elevated: unknown with zero confidence
+    bank2, _ = _bank_with()
+    v2 = RootCauseAnalyzer(bank2).classify()
+    assert v2.kind == rca_mod.UNKNOWN
+    assert v2.confidence == 0.0
+
+
+def test_rca_node_failure_short_circuits():
+    bank, _ = _bank_with()
+    ev = NodeFailure(time_s=9.0, zone="za", acc_type="A100-40",
+                     available=0, lost=8)
+    verdict = RootCauseAnalyzer(bank).classify(ev)
+    assert verdict.kind == rca_mod.NODE_FAILURE
+    assert verdict.target == ("za", "A100-40")
+    assert verdict.remediation == "rollback-replan"
+
+
+# --- fault injection ---------------------------------------------------------
+def test_fault_spec_windows_and_injector_determinism():
+    f = FaultSpec("compute_delay", zone="z", acc_type="a", start_step=10,
+                  duration=5, factor=3.0)
+    assert not f.active(9) and f.active(10) and f.active(14)
+    assert not f.active(15)
+    forever = FaultSpec("data_stall", start_step=4)
+    assert forever.active(10 ** 6)
+    with pytest.raises(ValueError):
+        FaultSpec("bad_kind")
+
+    inj = FaultInjector([f], seed=3, noise_frac=0.05)
+    assert inj.compute_factor(12, "z", "a") == 3.0
+    assert inj.compute_factor(12, "other", "a") == 1.0
+    assert inj.compute_factor(20, "z", "a") == 1.0      # expired
+    # seeded noise: same (seed, step, stream) -> same draw; others differ
+    assert inj.noise(5, ("F", 0, 0)) == inj.noise(5, ("F", 0, 0))
+    assert inj.noise(5, ("F", 0, 0)) != inj.noise(6, ("F", 0, 0))
+    assert inj.noise(5, ("F", 0, 0)) != inj.noise(5, ("F", 0, 1))
+    assert FaultInjector([], seed=3, noise_frac=0.0).noise(1, ("x",)) == 1.0
+
+    link = FaultSpec("link_degrade", zone="za", zone_b="zb", factor=4.0)
+    inj2 = FaultInjector([link])
+    assert inj2.link_factor(0, "za", "zb") == 4.0
+    assert inj2.link_factor(0, "zb", "za") == 4.0        # unordered pair
+    assert inj2.link_factor(0, "za", "zc") == 1.0
+
+    hang = FaultSpec("worker_hang", zone="z", acc_type="a", start_step=2)
+    inj3 = FaultInjector([hang])
+    assert not inj3.hung(1, "z", "a") and inj3.hung(2, "z", "a")
+    stall = FaultSpec("data_stall", factor=0.5)
+    assert FaultInjector([stall]).stall_s(0, 2.0) == pytest.approx(1.0)
+
+
+def test_degrade_link_slows_the_link_class():
+    fast = GEO.link_between("us-central1-a", "us-west1-a")
+    slow_c = degrade_link(GEO, "us-central1-a", "us-west1-a", 4.0)
+    slow = slow_c.link_between("us-central1-a", "us-west1-a")
+    assert slow.alpha == pytest.approx(fast.alpha * 4.0)
+    assert slow.beta == pytest.approx(fast.beta / 4.0)
+    assert slow.time(1 << 20) > fast.time(1 << 20)
+    # intra-zone links untouched
+    assert slow_c.links["intra-zone"].beta == GEO.links["intra-zone"].beta
+
+
+# --- the chaos loop ----------------------------------------------------------
+def test_chaos_compute_delay_converges():
+    fault = FaultSpec("compute_delay", zone="us-central1-a",
+                      acc_type="A100-40", start_step=16, factor=2.5)
+    h = ChaosHarness(_job(), GEO, fault=fault, seed=7, max_steps=30)
+    rep = h.run()
+    assert rep.verdict_kind == EXPECTED_VERDICT["compute_delay"]
+    assert rep.decision == "route-around"
+    assert rep.detect_delay is not None and rep.detect_delay <= 6
+    assert rep.ratio <= 1.2, rep.row()
+    assert h.decisions and "slow-chip" in h.decisions[0]["verdict"]
+
+
+def test_chaos_worker_hang_rolls_back():
+    fault = FaultSpec("worker_hang", zone="us-central1-a",
+                      acc_type="A100-40", start_step=16)
+    h = ChaosHarness(_job(), GEO, fault=fault, seed=7, max_steps=30)
+    rep = h.run()
+    assert rep.verdict_kind == EXPECTED_VERDICT["worker_hang"]
+    assert rep.decision == "rollback"
+    assert rep.detect_delay is not None and rep.detect_delay <= 6
+    assert rep.ratio <= 1.2, rep.row()
+    assert "NodeFailure" in rep.event
+
+
+def test_chaos_clean_run_no_events():
+    h = ChaosHarness(_job(), GEO, fault=None, seed=7, max_steps=25)
+    rep = h.run()
+    assert rep.n_events == 0
+    assert rep.detected_step is None and rep.verdict is None
+    assert rep.decision == "-"
+
+
+# --- runtime integration (multi-device subprocesses) -------------------------
+@pytest.mark.slow
+def test_pipeline_emits_telemetry():
+    out = run_py("""
+        import dataclasses, jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.dist.pipeline import MPMDPipeline, even_stages
+        from repro.models import model as model_lib
+        from repro.telemetry import TelemetryBus
+        from repro.train import optimizer as opt_lib
+        cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                                  n_layers=4, tie_embeddings=False)
+        stages = even_stages(cfg, tps=[2, 2], dp=1)
+        pipe = MPMDPipeline(cfg, stages, opt_lib.OptimizerConfig(lr=1e-3))
+        pipe.full_params_like(jax.device_get(
+            model_lib.init(cfg, jax.random.PRNGKey(9))))
+        bus = TelemetryBus()
+        pipe.attach_telemetry(bus)
+        rng = np.random.default_rng(0)
+        NM, B, S = 2, 4, 16
+        toks = rng.integers(0, cfg.vocab_size,
+                            (NM, B, S + 1)).astype(np.int32)
+        batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+        for _ in range(3):
+            pipe.train_step(batch)
+        # per-microbatch compute streams for both stages
+        assert len(bus.values("fwd_time", (0, 0))) == 3 * NM
+        assert len(bus.values("fwd_time", (1, 0))) == 3 * NM
+        assert len(bus.values("bwd_time", (1, 0))) == 3 * NM
+        # boundary transfers + per-step scalars + presence
+        assert len(bus.values("p2p_time", (0, 1, 0, 0))) > 0
+        assert len(bus.values("step_time", ())) == 3
+        hb = bus.latest("heartbeat", (1, 0))
+        assert hb is not None and hb.meta["chips"] == 2
+        assert all(v > 0 for v in bus.values("step_time", ()))
+        print("OK", bus.n_samples)
+    """, devices=8, timeout=900)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_trainer_emits_telemetry(tmp_path):
+    out = run_py(f"""
+        from repro.configs import get_config
+        from repro.telemetry import TelemetryBus
+        from repro.train.elastic import ElasticTrainer
+        from repro.train import optimizer as opt_lib, data as data_lib
+        cfg = get_config("smollm_360m").reduced()
+        bus = TelemetryBus()
+        tr = ElasticTrainer(
+            cfg, opt_lib.OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                         total_steps=20),
+            data_lib.DataConfig(seq_len=16, global_batch=8),
+            workdir={str(tmp_path)!r}, checkpoint_every=100,
+            telemetry=bus)
+        tr.clock = lambda: 123.0            # pinned clock (controller mode)
+        tr.train(5)
+        assert len(bus.values("step_time", ())) == 5
+        assert len(bus.values("data_stall", ())) == 5
+        hb = bus.latest("heartbeat", (0, 0))
+        assert hb.meta["chips"] == tr.plan.n_devices
+        assert hb.time_s == 123.0
+        assert all(v >= 0 for v in bus.values("data_stall", ()))
+        print("OK")
+    """, devices=8, timeout=900)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_controller_audit_log_jsonl(tmp_path):
+    out = run_py(f"""
+        from repro.configs import get_config
+        from repro.core.cluster import single_zone
+        from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+        from repro.core.profiler.analytic import TrainJob
+        from repro.manager import (AvailabilityMonitor, Controller,
+                                   ControllerConfig, IncrementalReplanner,
+                                   ListFeed, TransitionConfig,
+                                   TransitionModel)
+        from repro.telemetry import TelemetryBus, read_jsonl
+        from repro.train import data as data_lib, optimizer as opt_lib
+        from repro.train.elastic import ElasticTrainer
+        import os
+        c = lambda n: single_zone("cpu-host", n)
+        feed = ListFeed([(120.0, c(2))])     # bulk preemption 4 -> 2
+        cfg = get_config("smollm_360m").reduced()
+        job = TrainJob(cfg=cfg, seq_len=16, global_batch=8)
+        audit = os.path.join({str(tmp_path)!r}, "audit.jsonl")
+        trainer = ElasticTrainer(
+            cfg, opt_lib.OptimizerConfig(lr=1e-3, warmup_steps=2,
+                                         total_steps=40),
+            data_lib.DataConfig(seq_len=16, global_batch=8),
+            workdir={str(tmp_path)!r}, checkpoint_every=3)
+        ctl = Controller(
+            trainer, AvailabilityMonitor(c(4), [feed]),
+            IncrementalReplanner(job, Objective(MAX_THROUGHPUT)),
+            transition=TransitionModel(
+                TransitionConfig(hysteresis_s=120.0)),
+            config=ControllerConfig(step_time_s=60.0, max_devices=4,
+                                    audit_path=audit))
+        bus = TelemetryBus()
+        ctl.attach_telemetry(bus)
+        ctl.run(5)
+        recs = read_jsonl(audit)
+        # every decision streamed, same order, with absolute timestamps
+        # and the triggering event
+        assert len(recs) == len(ctl.decisions) >= 2
+        assert all(r["kind"] == "decision" for r in recs)
+        assert all(r["wall_time_s"] > 1e9 for r in recs)
+        assert recs[0]["action"] == "start"
+        assert any("NodeFailure" in r["event"] and r["action"] == "rollback"
+                   for r in recs)
+        for r, d in zip(recs, ctl.decisions):
+            assert r["action"] == d["action"] and r["event"] == d["event"]
+        # telemetry flowed through the trainer on the sim clock
+        assert len(bus.values("step_time", ())) == 5
+        assert max(s.time_s for s in bus.series("step_time", ())) \\
+            <= ctl.sim_time
+        assert ctl.det_bank is not None and ctl.rca is not None
+        print("OK", len(recs))
+    """, devices=8, timeout=900)
+    assert "OK" in out
