@@ -1,0 +1,23 @@
+"""Plan <-> program static analysis (DESIGN.md §15).
+
+Three layers, all hardware-free:
+
+* :mod:`repro.analysis.collectives` + :mod:`repro.analysis.audit` — the
+  collective auditor: extract every collective from post-SPMD HLO into a
+  structured IR, map replica groups onto the physical topology, and diff
+  against the simulator's predicted comm terms.
+* :mod:`repro.analysis.sharding_lint` — static rules over sharding
+  declarations and PartitionSpecs (silent full replication, batch specs
+  that replicate across the dp axes).
+* :mod:`repro.analysis.lint` — AST-based repo invariant checker
+  (``python -m repro.analysis.lint src/``).
+"""
+from repro.analysis.audit import AuditError, audit_hlo, plan_audit
+from repro.analysis.collectives import (CollectiveOp, DeviceTopology,
+                                        extract_collectives)
+from repro.analysis.findings import Finding, Report
+
+__all__ = [
+    "AuditError", "audit_hlo", "plan_audit", "CollectiveOp",
+    "DeviceTopology", "extract_collectives", "Finding", "Report",
+]

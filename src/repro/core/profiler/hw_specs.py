@@ -36,6 +36,24 @@ class AcceleratorSpec:
     # model gates feasibility on ``usable_mem_bytes``, not raw capacity —
     # a plan sized to 100% of HBM OOMs in practice.
     reserved_mem_fraction: float = 0.06
+    # Per-link collective-fabric bandwidth (one ICI link on TPUs), bytes/s.
+    # 0 means "no dedicated per-link figure" — consumers fall back to
+    # ``intra_node_bw`` (see ``collective_link_bw``).
+    ici_bw: float = 0.0
+    # Per-chip cross-pod / data-center-network bandwidth, bytes/s.
+    # 0 means fall back to the generic "dcn" LinkSpec.
+    dcn_bw: float = 0.0
+
+    @property
+    def collective_link_bw(self) -> float:
+        """Bandwidth one collective ring runs at: the per-link ICI figure
+        when the chip publishes one, else the full intra-node fabric."""
+        return self.ici_bw or self.intra_node_bw
+
+    @property
+    def cross_pod_bw(self) -> float:
+        """Per-chip bandwidth across pods/zones (DCN on TPUs)."""
+        return self.dcn_bw or LINKS["dcn"].beta
 
     @property
     def price_per_sec(self) -> float:
@@ -62,12 +80,13 @@ ACCELERATORS: Dict[str, AcceleratorSpec] = {
         name="tpu-v5e", peak_flops=197e12, mem_bytes=16e9, mem_bw=819e9,
         intra_node_bw=4 * 50e9,  # 4 ICI links x ~50 GB/s
         price_per_hour=1.20, chips_per_node=4, efficiency=0.55,
-        reserved_mem_fraction=0.08),   # TFRT + ICI scratch
+        reserved_mem_fraction=0.08,    # TFRT + ICI scratch
+        ici_bw=50e9, dcn_bw=25e9),
     "tpu-v5p": AcceleratorSpec(
         name="tpu-v5p", peak_flops=459e12, mem_bytes=95e9, mem_bw=2765e9,
         intra_node_bw=6 * 100e9,
         price_per_hour=4.20, chips_per_node=4, efficiency=0.55,
-        reserved_mem_fraction=0.08),
+        reserved_mem_fraction=0.08, ici_bw=100e9, dcn_bw=25e9),
     # Paper hardware.
     "A100-40": AcceleratorSpec(
         name="A100-40", peak_flops=312e12, mem_bytes=40e9, mem_bw=1555e9,

@@ -130,7 +130,7 @@ def _stage_sync_times(profile: JobProfile, plan: ParallelPlan,
     zones = sorted(groups)
     fast = cluster.links["intra-zone"]
     worst = 0.0
-    for tp, zone in {(r.tp, r.zone) for r in st.replicas}:
+    for tp, zone in sorted({(r.tp, r.zone) for r in st.replicas}):
         nbytes = params / tp * DTYPE_BYTES / n_buckets
         if len(zones) == 1:
             t = network.all_reduce_time(fast, nbytes, d)

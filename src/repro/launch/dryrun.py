@@ -6,7 +6,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 For each cell this proves, without hardware:
   * the sharding configuration is coherent (no partitioner errors),
-  * the per-device memory fits v5e HBM (``memory_analysis``),
+  * the per-device memory fits the target chip's HBM (``memory_analysis``
+    against the ``--chip`` catalog entry, default tpu-v5e),
   * and it extracts the §Roofline terms: per-device FLOPs/bytes from
     ``cost_analysis`` + collective traffic parsed from the post-SPMD HLO.
 
@@ -34,15 +35,13 @@ from repro.launch import shapes as shapes_mod
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as model_lib
 from repro.models.config import SHAPES
+from repro.core.profiler.hw_specs import AcceleratorSpec, get_accelerator
 from repro.train import optimizer as opt_lib
 from repro.train import train_step as ts_lib
 
-# v5e roofline constants (task spec)
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
-DCN_BW = 25e9
-HBM_BYTES = 16e9
+# Dry-runs price against the reproduction target by default; --chip swaps
+# the whole roofline to any catalog entry (hw_specs.ACCELERATORS).
+DEFAULT_CHIP = "tpu-v5e"
 
 
 def step_fn_for(cell: shapes_mod.Cell, mesh):
@@ -64,9 +63,36 @@ def step_fn_for(cell: shapes_mod.Cell, mesh):
     return decode
 
 
+def _audit_cell(cfg, cell, mesh, hlo_text: str, tag: str) -> Dict:
+    """Collective audit of one compiled train cell: diff the HLO's
+    trip-weighted collective volumes against the simulator's predicted
+    comm terms (``analysis.audit.predicted_comm``).  Advisory — the
+    report rides on the artifact; ``repro.analysis.demo`` is the CI
+    pass/fail gate."""
+    from repro.analysis import audit as audit_mod
+    from repro.analysis import collectives as coll_mod
+    from repro.core.profiler.analytic import JobProfile, TrainJob
+    sizes = dict(mesh.shape)
+    tp = int(sizes.get("model", 1))
+    dp = 1
+    for a in ("pod", "data"):
+        dp *= int(sizes.get(a, 1))
+    n_micro = max(1, int(cell.num_microbatches or 1))
+    mbs = max(1, cell.shape.global_batch // (dp * n_micro))
+    job = TrainJob(cfg=cfg, seq_len=cell.shape.seq_len,
+                   global_batch=cell.shape.global_batch)
+    predicted = audit_mod.predicted_comm(JobProfile(job), tp=tp, dp=dp,
+                                         mbs=mbs, n_micro=n_micro)
+    topo = coll_mod.DeviceTopology.from_mesh(mesh, zone_axes=("pod",))
+    return audit_mod.audit_hlo(hlo_text, topo, predicted,
+                               tag=tag).to_dict()
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: str, mesh=None, overrides: Optional[Dict] = None,
-             tag: str = "") -> Dict:
+             tag: str = "", chip: str = DEFAULT_CHIP,
+             audit: bool = False) -> Dict:
+    acc: AcceleratorSpec = get_accelerator(chip)
     cfg = get_config(arch)
     nm_override = 0
     if overrides:
@@ -78,6 +104,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         multi_pod=multi_pod)
     mesh_name = "multi" if multi_pod else "single"
     rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chip": chip,
                  "mesh_shape": dict(mesh.shape), "ok": False, "tag": tag,
                  "overrides": dict(overrides or {},
                                    **({"num_microbatches": nm_override}
@@ -110,10 +137,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         flops_dev = scaled.flops
         bytes_dev = scaled.bytes_accessed
         per_dev_mem = xla_peak_bytes(compiled)
-        # roofline terms (per device == per chip; see DESIGN.md §8)
-        t_comp = flops_dev / PEAK_FLOPS
-        t_mem = bytes_dev / HBM_BW
-        t_coll = scaled.collective_traffic / ICI_BW
+        # roofline terms (per device == per chip; see DESIGN.md §8),
+        # priced from the accelerator catalog entry for ``chip``
+        t_comp = flops_dev / acc.peak_flops
+        t_mem = bytes_dev / acc.mem_bw
+        t_coll = scaled.collective_traffic / acc.collective_link_bw
         tokens = cell.shape.global_batch * (
             cell.shape.seq_len if cell.kind != "decode" else 1)
         model_flops = 6 * cfg.active_params() * tokens if cell.kind == "train" \
@@ -133,7 +161,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 "alias_bytes": mem.alias_size_in_bytes,
                 "peak_bytes": per_dev_mem,
             },
-            fits_hbm=bool(per_dev_mem <= HBM_BYTES),
+            fits_hbm=bool(per_dev_mem <= acc.mem_bytes),
             collectives={k: {"traffic": v} for k, v in
                          scaled.collective_by_kind.items()},
             collectives_raw={k: {"count": v[0], "bytes": v[1],
@@ -145,7 +173,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 "collective_s": t_coll,
                 # multi-pod upper bound: all collective traffic priced at
                 # DCN bandwidth (pod-axis attribution is in EXPERIMENTS.md)
-                "collective_dcn_s": (scaled.collective_traffic / DCN_BW
+                "collective_dcn_s": (scaled.collective_traffic
+                                     / acc.cross_pod_bw
                                      if multi_pod else None),
                 "dominant": max(
                     [("compute", t_comp), ("memory", t_mem),
@@ -156,6 +185,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             useful_flops_ratio=(model_flops / (flops_dev * n_chips)
                                 if flops_dev else None),
         )
+        if audit and cell.kind == "train":
+            rec["audit"] = _audit_cell(
+                cfg, cell, mesh, txt,
+                tag=f"{arch}__{shape_name}__{mesh_name}")
     except Exception as e:     # a failing cell is a bug — record it loudly
         rec.update(ok=False, error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])
@@ -185,6 +218,14 @@ def main() -> None:
                          "moe_dispatch=per_seq logits_chunk=512")
     ap.add_argument("--tag", default="",
                     help="artifact suffix for variant runs")
+    ap.add_argument("--chip", default=DEFAULT_CHIP,
+                    help="accelerator catalog entry to price the roofline "
+                         "against (hw_specs.ACCELERATORS)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the collective auditor (repro.analysis) on "
+                         "each train cell and record the report in the "
+                         "artifact (advisory; the CI gate is "
+                         "repro.analysis.demo)")
     args = ap.parse_args()
     overrides = {}
     for ov in args.override:
@@ -210,7 +251,8 @@ def main() -> None:
                 t0 = time.perf_counter()
                 rec = run_cell(arch, shape, mp, args.out,
                                mesh=mesh_cache[mp], overrides=overrides,
-                               tag=args.tag)
+                               tag=args.tag, chip=args.chip,
+                               audit=args.audit)
                 dt = time.perf_counter() - t0
                 if rec.get("skipped"):
                     status = "SKIP"

@@ -12,6 +12,24 @@ traffic estimates feed the §Roofline collective term:
 
 Group sizes come from ``replica_groups=[G,S]<=...`` annotations (S = group
 size); old-style explicit lists ``{{0,1},{2,3}}`` are also handled.
+
+Split-phase (async) collectives appear as a ``-start`` / ``-done`` pair;
+only the ``-start`` (or bare, synchronous) form is counted.  A ``-start``
+op's shape is a tuple carrying BOTH the aliased input and the result
+buffer (``(f32[128], f32[512]) all-gather-start(...)``), so tuple shapes
+on start ops contribute their largest element only — summing the tuple
+double-counts the transfer (result == k * input for all-gather, input ==
+result for the rest, so the max is the result).  Bare variadic collectives
+(``(f32[a], f32[b]) all-reduce(x, y)``) reduce distinct buffers and DO sum.
+
+Shapes whose dtype is not in the catalog are not silently dropped: the
+dtype token is surfaced in ``CollectiveStats.unknown_dtypes`` so the
+static auditor (``repro.analysis``) can emit a warning finding instead of
+under-reporting traffic.
+
+``repro.analysis.collectives`` builds a structured per-op IR (replica
+groups resolved to device ids, trip-count multipliers) on top of the same
+grammar; this module stays the cheap aggregate used by the dry-run.
 """
 from __future__ import annotations
 
@@ -32,7 +50,7 @@ _SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
 _OP_RE = re.compile(
     r"=\s*(\(?[\w\[\],\s{}]*?\)?)\s*"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\(")
+    r"(-start|-done)?\(")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
@@ -51,10 +69,45 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
+def shape_elements(shape_str: str) -> Tuple[List[int], List[str]]:
+    """Per-tuple-element byte sizes of a (possibly tuple) shape string,
+    plus any dtype tokens missing from the catalog."""
+    sizes: List[int] = []
+    unknown: List[str] = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            unknown.append(dt)
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes.append(n * _DTYPE_BYTES[dt])
+    return sizes, unknown
+
+
+def result_bytes(shape_str: str, phase: Optional[str]) -> Tuple[int, List[str]]:
+    """Transferred bytes of one collective given its async phase.
+
+    ``phase`` is ``"-start"`` / ``"-done"`` / None (bare).  Start-op tuples
+    carry (input, result) — take the max element; bare tuples are variadic
+    results — sum them.
+    """
+    sizes, unknown = shape_elements(shape_str)
+    if not sizes:
+        return 0, unknown
+    if phase == "-start" and len(sizes) > 1:
+        return max(sizes), unknown
+    return sum(sizes), unknown
+
+
 @dataclasses.dataclass
 class CollectiveStats:
     # op kind -> (count, raw result bytes, ring-scaled traffic bytes)
     by_kind: Dict[str, Tuple[int, int, float]]
+    # dtype tokens seen on collective shapes but missing from the catalog
+    # (their bytes are NOT in by_kind — the auditor warns on these)
+    unknown_dtypes: Tuple[str, ...] = ()
 
     @property
     def total_bytes(self) -> int:
@@ -68,36 +121,47 @@ class CollectiveStats:
 _COMMENT = re.compile(r"/\*.*?\*/")
 
 
+def ring_traffic(kind: str, nbytes: float, k: int) -> float:
+    """Ring-scaled wire traffic of one collective (matches network.py)."""
+    if kind == "collective-permute":
+        return float(nbytes)
+    if k <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (k - 1) / k * nbytes
+    return (k - 1) / k * nbytes
+
+
 def collective_bytes(hlo_text: str) -> CollectiveStats:
     by_kind: Dict[str, List[float]] = {}
+    unknown: List[str] = []
     for line in hlo_text.splitlines():
         line = _COMMENT.sub("", line)
         m = _OP_RE.search(line)
         if not m:
             continue
-        if "-done(" in line:
-            continue                    # avoid double count of start/done
-        shape_str, kind = m.group(1), m.group(2)
-        nbytes = _shape_bytes(shape_str)
+        shape_str, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue                    # count -start (or bare) forms only
+        nbytes, unk = result_bytes(shape_str, phase)
+        for dt in unk:
+            if dt not in unknown:
+                unknown.append(dt)
         if nbytes == 0:
             continue
-        k = _group_size(line)
-        if kind == "all-reduce":
-            traffic = 2.0 * (k - 1) / k * nbytes if k > 1 else 0.0
-        elif kind == "collective-permute":
-            traffic = float(nbytes)
-        else:
-            traffic = (k - 1) / k * nbytes if k > 1 else 0.0
+        k = group_size(line)
+        traffic = ring_traffic(kind, nbytes, k)
         cur = by_kind.setdefault(kind, [0, 0, 0.0])
         cur[0] += 1
         cur[1] += nbytes
         cur[2] += traffic
     return CollectiveStats(
         by_kind={k: (int(v[0]), int(v[1]), float(v[2]))
-                 for k, v in by_kind.items()})
+                 for k, v in by_kind.items()},
+        unknown_dtypes=tuple(unknown))
 
 
-def _group_size(line: str) -> int:
+def group_size(line: str) -> int:
     m = _GROUPS_RE.search(line)
     if m:
         return int(m.group(2))
@@ -107,3 +171,6 @@ def _group_size(line: str) -> int:
     if _SRC_TGT_RE.search(line):
         return 2
     return 1
+
+
+_group_size = group_size        # backward-compatible private alias

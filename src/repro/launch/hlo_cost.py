@@ -259,7 +259,21 @@ def _collective(op: OpInfo) -> Optional[Tuple[str, float, float]]:
     base = op.kind.replace("-start", "").replace("-done", "")
     if base not in _COLLECTIVES or op.kind.endswith("-done"):
         return None
-    nbytes, _ = _shape_info(op.shape_str)
+    if op.kind.endswith("-start"):
+        # async start tuple = (input, result [, ctx]); summing it double
+        # counts the transfer — the result is the largest element.
+        sizes = []
+        for dt, dims in _SHAPE.findall(op.shape_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            sizes.append(n * _DTYPE_BYTES[dt])
+        nbytes = max(sizes) if sizes else 0
+    else:
+        nbytes, _ = _shape_info(op.shape_str)
     if nbytes == 0:
         return None
     k = _group_size(op.line)
@@ -272,11 +286,13 @@ def _collective(op: OpInfo) -> Optional[Tuple[str, float, float]]:
     return base, float(nbytes), traffic
 
 
-def analyze(text: str) -> CostSummary:
-    comps, entry = parse_computations(text)
-    if not entry:
-        return CostSummary()
-    # accumulate multipliers over the call graph
+def computation_multipliers(comps: Dict[str, Computation],
+                            entry: str) -> Dict[str, float]:
+    """Effective execution count of every computation, walking the call
+    graph from ``entry`` and multiplying by enclosing ``known_trip_count``s
+    (scan-over-layers / microbatch loops).  Shared with the collective
+    auditor (``repro.analysis.collectives``), which needs per-op trip
+    multipliers rather than aggregate costs."""
     mult: Dict[str, float] = {name: 0.0 for name in comps}
 
     def visit(name: str, m: float, depth: int = 0):
@@ -301,6 +317,14 @@ def analyze(text: str) -> CostSummary:
                     visit(bm.group(1), m, depth + 1)
 
     visit(entry, 1.0)
+    return mult
+
+
+def analyze(text: str) -> CostSummary:
+    comps, entry = parse_computations(text)
+    if not entry:
+        return CostSummary()
+    mult = computation_multipliers(comps, entry)
     # computations reached as fusion bodies: their ops stream through
     # registers/VMEM — only the fusion op at the call site moves HBM bytes.
     fusion_bodies = set()

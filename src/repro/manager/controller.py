@@ -74,6 +74,13 @@ class ControllerConfig:
     # stream every decision to this JSONL file (same trace format as the
     # telemetry bus export — one control-plane format end to end)
     audit_path: Optional[str] = None
+    # static plan auditor (repro.analysis): callable
+    # (plan, cluster) -> Report.  When set, every replan target of an
+    # *optional* transition is audited and error findings veto the move
+    # (transition.decide(audit_failed=True) -> DEFER).  Mandatory moves
+    # (shrinks, failures) are never vetoed.  Use
+    # ``repro.analysis.plan_audit`` for the structural checks.
+    plan_auditor: Optional[Any] = None
 
 
 class Controller:
@@ -155,7 +162,7 @@ class Controller:
             dec = self._decide(
                 cluster, mandatory=False, state_lost=False,
                 t_new=res.best.t_iter if res.best else None,
-                root_cause=verdict.kind)
+                root_cause=verdict.kind, res=res)
             if dec.kind in (RESHARD, ROUTE_AROUND):
                 self._commit(ev, cluster, self._n_devices(cluster), res,
                              dec, root_cause=verdict.kind)
@@ -202,15 +209,31 @@ class Controller:
                     link = cand
         return link
 
+    def _audit_failed(self, cluster: ClusterSpec,
+                      res: Optional[PlanResult]) -> bool:
+        """Static audit of an optional replan target (config.plan_auditor);
+        True (veto) when the auditor reports errors.  The report rides on
+        ``res.stats["audit"]`` either way so the decision log can show
+        what was found."""
+        fn = self.config.plan_auditor
+        if fn is None or res is None or res.best is None:
+            return False
+        report = fn(res.best.plan, cluster)
+        res.stats["audit"] = report.to_dict()
+        return not report.ok
+
     def _decide(self, cluster: ClusterSpec, *, mandatory: bool,
                 state_lost: bool, t_new: Optional[float],
                 t_old: Optional[float] = None,
                 event_age_s: float = 0.0,
-                root_cause: Optional[str] = None) -> TransitionDecision:
+                root_cause: Optional[str] = None,
+                res: Optional[PlanResult] = None) -> TransitionDecision:
         best = self._committed.best if self._committed else None
         t_iter_old = t_old if t_old is not None else \
             (best.t_iter if best else 1.0)
         movers = best.plan.n_chips if best else 1
+        audit_failed = (not mandatory and not state_lost
+                        and self._audit_failed(cluster, res))
         return self.transition.decide(
             mandatory=mandatory, state_lost=state_lost,
             state_bytes=self._state_bytes(),
@@ -218,7 +241,8 @@ class Controller:
             steps_since_ckpt=self.trainer.step % max(
                 1, self.trainer.checkpoint_every),
             t_iter_old_s=t_iter_old, t_iter_new_s=t_new,
-            event_age_s=event_age_s, root_cause=root_cause)
+            event_age_s=event_age_s, root_cause=root_cause,
+            audit_failed=audit_failed)
 
     def _record(self, event: Optional[ClusterEvent], action: str,
                 reason: str, result: Optional[PlanResult] = None,
@@ -287,7 +311,7 @@ class Controller:
         res = self.replanner.replan(cluster)
         dec = self._decide(cluster, mandatory=False, state_lost=False,
                            t_new=res.best.t_iter if res.best else None,
-                           event_age_s=0.0)
+                           event_age_s=0.0, res=res)
         if dec.kind == DEFER and "hysteresis" in dec.reason:
             if self.pending is None:
                 self.pending = {"cluster": cluster, "n": n_new,
@@ -312,7 +336,8 @@ class Controller:
         # plays the role of t_new / t_old (same hysteresis semantics).
         ratio = res.best.cost_per_iter / max(old.cost_per_iter, 1e-12)
         dec = self._decide(cluster, mandatory=False, state_lost=False,
-                           t_new=ratio, t_old=1.0, event_age_s=0.0)
+                           t_new=ratio, t_old=1.0, event_age_s=0.0,
+                           res=res)
         if dec.kind == DEFER and "hysteresis" in dec.reason:
             if self.pending_price is None:
                 self.pending_price = {"cluster": cluster,
@@ -369,12 +394,12 @@ class Controller:
                     if (res.best and old) else None
                 dec = self._decide(cluster, mandatory=False,
                                    state_lost=False, t_new=ratio,
-                                   t_old=1.0, event_age_s=age)
+                                   t_old=1.0, event_age_s=age, res=res)
             else:
                 dec = self._decide(
                     cluster, mandatory=False, state_lost=False,
                     t_new=res.best.t_iter if res.best else None,
-                    event_age_s=age)
+                    event_age_s=age, res=res)
             setattr(self, attr, None)
             if dec.kind == RESHARD:
                 self._commit(None, cluster, self._n_devices(cluster), res,

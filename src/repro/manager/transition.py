@@ -79,7 +79,8 @@ class TransitionModel:
                steps_since_ckpt: int, t_iter_old_s: float,
                t_iter_new_s: Optional[float],
                event_age_s: float = 0.0,
-               root_cause: Optional[str] = None) -> TransitionDecision:
+               root_cause: Optional[str] = None,
+               audit_failed: bool = False) -> TransitionDecision:
         """Pick the cheapest sound outcome for one proposed transition.
 
         ``mandatory``: capacity shrank below what the job runs on.
@@ -95,6 +96,12 @@ class TransitionModel:
         a ``slow-chip``/``slow-link`` verdict returns ``ROUTE_AROUND``
         with the persistence gate waived: the detector's own persistence
         + cooldown already established that the degradation is sustained.
+        ``audit_failed``: the static audit (``repro.analysis``) of the
+        replan target reported errors.  An *optional* move onto a plan
+        whose program the simulator provably mispriced is vetoed (DEFER)
+        — its projected gain can't be trusted.  Mandatory moves and
+        rollbacks still proceed: a broken-but-running layout beats no
+        capacity at all, and the veto is recorded for the operator.
         """
         reshard = self.reshard_cost_s(state_bytes, link, movers)
         details = {"reshard_cost_s": reshard}
@@ -115,6 +122,11 @@ class TransitionModel:
             return TransitionDecision(
                 RESHARD, reshard, "capacity below current plan; state intact",
                 details)
+        if audit_failed:
+            return TransitionDecision(
+                DEFER, 0.0,
+                "replan target failed static audit; optional move vetoed",
+                {**details, "audit_failed": True})
         if t_iter_new_s is None or t_iter_new_s >= t_iter_old_s:
             return TransitionDecision(
                 DEFER, 0.0, "no faster plan available", details)

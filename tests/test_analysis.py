@@ -1,0 +1,466 @@
+"""Static analysis subsystem (DESIGN.md §15): collective extraction,
+topology mapping, the HLO-vs-simulator auditor, sharding lint, the AST
+invariant linter, and the planner/controller gating that consumes them."""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import (AuditError, CollectiveOp, DeviceTopology,
+                            audit_hlo, extract_collectives, plan_audit)
+from repro.analysis import lint as lint_mod
+from repro.analysis.collectives import (CROSS_ZONE, INTRA_NODE, INTRA_ZONE,
+                                        parse_replica_groups,
+                                        volumes_by_kind)
+from repro.analysis.findings import ERROR, WARNING, Report
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+# --- extractor: synthetic post-SPMD HLO --------------------------------------
+_SYNTH_HLO = """\
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,32])) -> (s32[], f32[8,32]) {
+  %p = (s32[], f32[8,32]) parameter(0)
+  %g = f32[8,32]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,32]{1,0} all-reduce(%g), replica_groups=[2,2]<=[2,2]T(1,0), to_apply=%add
+  ROOT %t = (s32[], f32[8,32]) tuple(%g, %ar)
+}
+
+%cond (p: (s32[], f32[8,32])) -> pred[] {
+  %p = (s32[], f32[8,32]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (x: f32[8,32]) -> f32[8,32] {
+  %x = f32[8,32]{1,0} parameter(0)
+  %w = (s32[], f32[8,32]) while(%x), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+  %ags = (f32[8,32], f32[16,32]) all-gather-start(%x), replica_groups={{0,2},{1,3}}, dimensions={0}
+  %agd = f32[16,32] all-gather-done(%ags)
+  %cp = f32[8,32] collective-permute(%x), source_target_pairs={{0,1},{1,0}}
+  ROOT %r = f32[8,32] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_extract_collectives_synthetic():
+    ops = {op.name: op for op in extract_collectives(_SYNTH_HLO)}
+    # the -done half is skipped; -start, bare and permute forms counted
+    assert set(ops) == {"ar", "ags", "cp"}
+    ar = ops["ar"]
+    assert ar.kind == "all-reduce" and ar.computation == "body"
+    assert ar.nbytes == 8 * 32 * 4
+    assert ar.trip_mult == 4.0                      # known_trip_count
+    # iota [2,2]<=[2,2]T(1,0): transpose of row-major 2x2 -> column groups
+    assert ar.groups == ((0, 2), (1, 3))
+    assert ar.traffic == 2 * (2 - 1) / 2 * 1024     # ring all-reduce, k=2
+    assert ar.total_traffic == 4 * ar.traffic
+    ag = ops["ags"]
+    assert ag.kind == "all-gather" and ag.phase == "-start"
+    # start tuple = (aliased input, result): max element, never the sum
+    assert ag.nbytes == 16 * 32 * 4
+    assert ag.groups == ((0, 2), (1, 3)) and ag.trip_mult == 1.0
+    cp = ops["cp"]
+    assert cp.kind == "collective-permute"
+    assert cp.groups == ((0, 1), (1, 0))
+    assert cp.traffic == cp.nbytes                  # one hop
+
+
+def test_parse_replica_groups_forms():
+    assert parse_replica_groups("replica_groups=[2,4]<=[8]") == \
+        ((0, 1, 2, 3), (4, 5, 6, 7))
+    # np.transpose(arange(8).reshape(2,2,2), (2,0,1)).reshape(4,2)
+    assert parse_replica_groups("replica_groups=[4,2]<=[2,2,2]T(2,0,1)") == \
+        ((0, 2), (4, 6), (1, 3), (5, 7))
+    assert parse_replica_groups("replica_groups={{0,1},{2,3}}") == \
+        ((0, 1), (2, 3))
+    assert parse_replica_groups("source_target_pairs={{0,1},{1,2}}") == \
+        ((0, 1), (1, 2))
+    assert parse_replica_groups("no annotation here") == ()
+
+
+# --- topology mapping --------------------------------------------------------
+def _topo2zone():
+    # 8 partitions, 2 zones, 2 chips per node
+    return DeviceTopology(zones=("z0",) * 4 + ("z1",) * 4, chips_per_node=2)
+
+
+def test_topology_domains():
+    t = _topo2zone()
+    assert t.domain((0, 1)) == INTRA_NODE
+    assert t.domain((0, 2)) == INTRA_ZONE
+    assert t.domain((0, 4)) == CROSS_ZONE
+    op = CollectiveOp(name="x", kind="all-gather", phase=None,
+                      computation="main", nbytes=1024, group_size=2,
+                      groups=((0, 1), (2, 6)), trip_mult=1.0)
+    # widest domain across groups wins
+    assert t.op_domain(op) == CROSS_ZONE
+
+
+def test_volumes_by_kind_min_bytes():
+    t = _topo2zone()
+    big = CollectiveOp("big", "all-reduce", None, "main", 4096, 4,
+                       ((0, 1, 2, 3),), 2.0)
+    tiny = CollectiveOp("tiny", "all-reduce", None, "main", 4, 8,
+                        (tuple(range(8)),), 1.0)
+    vols = volumes_by_kind([big, tiny], t, min_bytes=64)
+    assert vols["all-reduce"]["count"] == 1
+    assert vols["all-reduce"]["traffic"] == big.total_traffic
+    assert vols["all-reduce"]["domains"] == {INTRA_ZONE: big.total_traffic}
+
+
+# --- the auditor -------------------------------------------------------------
+def _ar(nbytes=4096, groups=((0, 1, 2, 3),), trips=2.0, kind="all-reduce",
+        name="ar"):
+    k = max(len(g) for g in groups)
+    return CollectiveOp(name, kind, None, "main", nbytes, k, groups, trips)
+
+
+def test_audit_clean_and_mismatch():
+    t = _topo2zone()
+    op = _ar()                                  # 2 * 3/4 * 4096 * 2 = 12288
+    clean = audit_hlo([op], t, {"all-reduce": 12288.0}, min_bytes=64)
+    assert clean.ok and not clean.findings
+    assert clean.summary["rel_diff"]["all-reduce"] == 0.0
+    bad = audit_hlo([op], t, {"all-reduce": 4000.0}, min_bytes=64)
+    assert not bad.ok
+    (f,) = bad.errors()
+    assert f.kind == "VolumeMismatch"
+    assert f.data["actual"] == 12288.0 and f.data["predicted"] == 4000.0
+    # within tolerance -> clean
+    near = audit_hlo([op], t, {"all-reduce": 11000.0}, min_bytes=64,
+                     tol=0.2)
+    assert near.ok and not near.findings
+
+
+def test_audit_unpredicted_gathers():
+    t = _topo2zone()
+    xz = _ar(kind="all-gather", groups=((0, 4),), name="xz")
+    local = _ar(kind="all-to-all", groups=((0, 1),), name="local")
+    rep = audit_hlo([xz, local], t, {}, min_bytes=64)
+    kinds = rep.by_kind()
+    assert kinds["CrossZoneAllGather"] == 1     # error: crosses zones
+    assert kinds["SilentReshard"] == 1          # warning: intra-node
+    assert [f.kind for f in rep.errors()] == ["CrossZoneAllGather"]
+    (err,) = rep.errors()
+    assert err.where == "xz" and err.data["domain"] == CROSS_ZONE
+
+
+def test_audit_unpriced_and_unknown_dtype():
+    t = _topo2zone()
+    rs = _ar(kind="reduce-scatter", name="rs")
+    rep = audit_hlo([rs], t, {"all-reduce": 100.0}, min_bytes=64)
+    kinds = rep.by_kind()
+    assert kinds["UnpricedCollective"] == 1
+    # the predicted all-reduce never appears -> no mismatch emitted for it
+    assert "VolumeMismatch" in kinds            # actual 0 vs predicted 100
+    odd = CollectiveOp("odd", "all-reduce", None, "main", 2048, 2,
+                       ((0, 1),), 1.0, unknown_dtypes=("f4e2m1",))
+    rep2 = audit_hlo([odd], t, {"all-reduce": 2048.0}, min_bytes=64)
+    assert any(f.kind == "UnknownDtype" and f.data["dtype"] == "f4e2m1"
+               for f in rep2.warnings())
+
+
+def test_audit_min_bytes_filter():
+    t = _topo2zone()
+    tiny = _ar(nbytes=8, name="loss")           # f32[] control scalars
+    rep = audit_hlo([tiny], t, {}, min_bytes=1024)
+    assert rep.ok and not rep.findings
+    assert rep.summary["n_ops_ignored"] == 1
+
+
+def test_report_roundtrip(tmp_path):
+    rep = Report(tag="t")
+    rep.add("VolumeMismatch", ERROR, "boom", where="ar", actual=2.0)
+    rep.add("SilentReshard", WARNING, "meh")
+    path = rep.save(str(tmp_path))
+    d = json.load(open(path))
+    assert d["tag"] == "t" and d["ok"] is False
+    assert d["n_errors"] == 1 and d["n_warnings"] == 1
+    assert d["by_kind"] == {"VolumeMismatch": 1, "SilentReshard": 1}
+    assert d["findings"][0]["data"]["actual"] == 2.0
+    assert "VolumeMismatch" in rep.render()
+
+
+# --- sharding lint -----------------------------------------------------------
+class _FakeMesh:
+    """dict-shaped mesh stand-in (sharding.py supports these in tests)."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_sharding_lint_divisibility_fallback():
+    from repro.analysis.sharding_lint import lint_batch, lint_decls
+    from repro.dist.sharding import Decl
+    mesh = _FakeMesh({"pod": 2, "data": 2, "model": 8})
+    decls = {
+        # 15 heads on an 8-way model axis: divisibility fallback -> ERROR
+        "attn": Decl(shape=(15, 256, 256), axes=("heads", None, None)),
+        # no policy rule for this logical axis at all -> WARNING
+        "conv": Decl(shape=(512, 512), axes=("mamba_conv", None)),
+        # divides cleanly -> sharded, no finding
+        "ff": Decl(shape=(16, 256, 256), axes=("heads", None, None)),
+    }
+    rep = lint_decls(decls, "tp", mesh, large_bytes=1024)
+    assert rep.by_kind() == {"ReplicatedLargeTensor": 2}
+    (err,) = rep.errors()
+    assert "attn" in err.where
+    assert err.data["fallbacks"] == [["heads", "model", 15, 8]]
+    (warn,) = rep.warnings()
+    assert "conv" in warn.where
+    # batch that divides no dp-axis suffix silently replicates -> ERROR
+    bad = lint_batch(mesh, 3)
+    assert [f.kind for f in bad.errors()] == ["BatchReplicated"]
+    ok = lint_batch(mesh, 16)
+    assert ok.ok and not ok.findings
+    assert ok.summary["batch_sharded_over"] == ["pod", "data"]
+
+
+def test_sharding_lint_small_tensors_ignored():
+    from repro.analysis.sharding_lint import lint_decls
+    from repro.dist.sharding import Decl
+    mesh = _FakeMesh({"model": 8})
+    decls = {"bias": Decl(shape=(15,), axes=("heads",))}
+    rep = lint_decls(decls, "tp", mesh)         # default 1 MiB threshold
+    assert rep.ok and not rep.findings
+    assert rep.summary["n_large"] == 0
+
+
+# --- AST invariant linter ----------------------------------------------------
+_BAD_SRC = """\
+import random
+import time
+
+import numpy as np
+
+
+def f(xs, acc):
+    t = time.time()
+    r = random.random()
+    n = np.random.randint(3)
+    for x in {1, 2, 3}:
+        pass
+    ys = [y for y in set(xs)]
+    if acc.mem_bytes > 5:
+        pass
+    return t, r, n, ys
+"""
+
+_OK_SRC = """\
+import random
+import time
+
+import jax
+import numpy as np
+
+
+def g(xs, key):
+    t = time.perf_counter()                 # stats-only timing: allowed
+    rng = np.random.default_rng(0)          # seeded: allowed
+    r = random.Random(0).random()           # seeded instance: allowed
+    z = jax.random.normal(key, (3,))        # explicit PRNG key: exempt
+    for x in sorted({1, 2, 3}):             # sorted set: deterministic
+        pass
+    return t, rng, r, z
+"""
+
+
+def test_ast_lint_rules(tmp_path):
+    p = tmp_path / "bad.py"
+    p.write_text(_BAD_SRC)
+    vs = lint_mod.lint_file(str(p), rules=lint_mod.ALL_RULES)
+    by_rule = {}
+    for v in vs:
+        by_rule.setdefault(v.rule, []).append(v)
+    assert len(by_rule["wallclock"]) == 1
+    assert len(by_rule["unseeded-random"]) == 2
+    assert len(by_rule["set-iteration"]) == 2
+    assert len(by_rule["mem-feasibility"]) == 1
+    assert not any(v.suppressed for v in vs)
+    ok = tmp_path / "ok.py"
+    ok.write_text(_OK_SRC)
+    assert lint_mod.lint_file(str(ok), rules=lint_mod.ALL_RULES) == []
+
+
+def test_ast_lint_suppression(tmp_path):
+    p = tmp_path / "sup.py"
+    p.write_text(textwrap.dedent("""\
+        import time
+        # lint: disable-file=set-iteration
+
+
+        def f(xs):
+            t = time.time()  # lint: disable=wallclock
+            for x in {1, 2}:
+                pass
+            return t, time.time()
+    """))
+    vs = lint_mod.lint_file(str(p), rules=lint_mod.ALL_RULES)
+    active = [v for v in vs if not v.suppressed]
+    sup = [v for v in vs if v.suppressed]
+    # line 6 wallclock + file-wide set-iteration waived; line 9 still fires
+    assert {v.rule for v in sup} == {"wallclock", "set-iteration"}
+    assert [v.rule for v in active] == ["wallclock"]
+    assert active[0].line == 9
+    assert "(suppressed)" in sup[0].render()
+
+
+def test_ast_lint_path_scoping(tmp_path):
+    d = tmp_path / "core" / "planner"
+    d.mkdir(parents=True)
+    inscope = d / "x.py"
+    inscope.write_text("import time\nt = time.time()\n")
+    outscope = tmp_path / "launch.py"
+    outscope.write_text("import time\nt = time.time()\n")
+    assert [v.rule for v in lint_mod.lint_file(str(inscope))] == \
+        ["wallclock"]
+    assert lint_mod.lint_file(str(outscope)) == []
+    # mem-feasibility is planner-only: simulator paths don't get it
+    sim = tmp_path / "core" / "simulator"
+    sim.mkdir()
+    simfile = sim / "y.py"
+    simfile.write_text("ok = a.mem_bytes > 5\n")
+    assert lint_mod.lint_file(str(simfile)) == []
+
+
+def test_lint_clean_on_shipped_tree():
+    """The invariant linter must pass on src/ — the same gate CI runs."""
+    vs = lint_mod.lint_paths([SRC])
+    active = [v for v in vs if not v.suppressed]
+    assert active == [], "\n".join(v.render() for v in active)
+
+
+def test_lint_cli(tmp_path, capsys):
+    p = tmp_path / "core" / "planner"
+    p.mkdir(parents=True)
+    (p / "x.py").write_text("import time\nt = time.time()\n")
+    assert lint_mod.main([str(tmp_path)]) == 1
+    assert "wallclock" in capsys.readouterr().out
+    assert lint_mod.main([str(tmp_path), "--rules", "set-iteration"]) == 0
+    with pytest.raises(SystemExit):
+        lint_mod.main([str(tmp_path), "--rules", "nope"])
+
+
+# --- planner gate + transition veto ------------------------------------------
+def _bad_auditor(plan, cluster):
+    rep = Report(tag="forced-failure")
+    rep.add("PlanCapacity", ERROR, "injected failure")
+    return rep
+
+
+def _planned(audit=None, auditor=None):
+    from repro.configs import get_config
+    from repro.core.cluster import single_zone
+    from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+    from repro.core.planner.search import SailorPlanner
+    from repro.core.profiler.analytic import TrainJob
+    job = TrainJob(cfg=get_config("opt-350m"), seq_len=2048,
+                   global_batch=256)
+    cluster = single_zone("A100-40", 8)
+    planner = SailorPlanner(job, audit=audit, auditor=auditor)
+    return planner, cluster
+
+def test_planner_audit_gate():
+    from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+    planner, cluster = _planned(audit="error")
+    res = planner.plan(cluster, Objective(MAX_THROUGHPUT))
+    assert res.best is not None
+    # a feasible single-zone plan passes the structural audit cleanly
+    assert res.stats["audit"]["ok"] is True
+    assert res.stats["audit"]["findings"] == []
+
+
+def test_planner_audit_gate_error_and_warn():
+    from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+    planner, cluster = _planned(audit="error", auditor=_bad_auditor)
+    with pytest.raises(AuditError) as ei:
+        planner.plan(cluster, Objective(MAX_THROUGHPUT))
+    assert ei.value.report.by_kind() == {"PlanCapacity": 1}
+    planner, cluster = _planned(audit="warn", auditor=_bad_auditor)
+    with pytest.warns(UserWarning, match="injected failure"):
+        res = planner.plan(cluster, Objective(MAX_THROUGHPUT))
+    assert res.stats["audit"]["ok"] is False
+    with pytest.raises(ValueError, match="audit must be"):
+        _planned(audit="bogus")
+
+
+def test_plan_audit_structural():
+    from repro.core.cluster import single_zone
+    from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+    planner, cluster = _planned()
+    plan = planner.plan(cluster, Objective(MAX_THROUGHPUT)).best.plan
+    assert plan_audit(plan, cluster).ok
+    # audited against a cluster that lost the zone: capacity errors
+    other = single_zone("A100-40", 8, zone="eu-west4-a")
+    rep = plan_audit(plan, other)
+    assert not rep.ok
+    assert all(f.kind == "PlanCapacity" for f in rep.errors())
+
+
+def test_controller_audit_wiring():
+    from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+    from repro.manager import Controller, ControllerConfig
+    planner, cluster = _planned()
+    res = planner.plan(cluster, Objective(MAX_THROUGHPUT))
+
+    class _Stub:
+        config = ControllerConfig(plan_auditor=_bad_auditor)
+
+    assert Controller._audit_failed(_Stub(), cluster, res) is True
+    assert res.stats["audit"]["ok"] is False
+
+    class _Off:
+        config = ControllerConfig()
+
+    assert Controller._audit_failed(_Off(), cluster, res) is False
+    assert Controller._audit_failed(_Stub(), cluster, None) is False
+
+
+def test_transition_audit_veto():
+    from repro.core.profiler.hw_specs import LinkSpec
+    from repro.manager.transition import (DEFER, RESHARD, ROLLBACK,
+                                          TransitionModel)
+    tm = TransitionModel()
+    kw = dict(state_bytes=1e9, link=LinkSpec("l", alpha=1e-4, beta=10e9),
+              movers=8, steps_since_ckpt=3, t_iter_old_s=2.0)
+    # big, old, genuine gain — but the target failed its audit: vetoed
+    d = tm.decide(mandatory=False, state_lost=False, t_iter_new_s=1.0,
+                  event_age_s=600.0, audit_failed=True, **kw)
+    assert d.kind == DEFER and d.details["audit_failed"] is True
+    assert "audit" in d.reason
+    # mandatory moves and rollbacks are never vetoed
+    assert tm.decide(mandatory=True, state_lost=False, t_iter_new_s=1.0,
+                     audit_failed=True, **kw).kind == RESHARD
+    assert tm.decide(mandatory=True, state_lost=True, t_iter_new_s=None,
+                     audit_failed=True, **kw).kind == ROLLBACK
+
+
+# --- end to end: the CI audit demo (8 host devices) --------------------------
+@pytest.mark.slow
+def test_audit_demo_end_to_end(tmp_path):
+    from helpers import run_py
+    out = run_py(f"""
+        import json
+        from repro.analysis import demo
+        out_dir = {str(tmp_path)!r}
+        rc = demo.main(["--out", out_dir])
+        assert rc == 0, rc
+        clean = json.load(open(out_dir + "/demo_clean.json"))
+        seeded = json.load(open(out_dir + "/demo_seeded.json"))
+        assert clean["ok"] and clean["findings"] == []
+        rel = clean["summary"]["rel_diff"]["all-reduce"]
+        assert rel <= 0.2, rel
+        assert not seeded["ok"]
+        kinds = [f["kind"] for f in seeded["findings"]]
+        assert "VolumeMismatch" in kinds, kinds
+        print("DEMO-OK", rel)
+    """, devices=8, timeout=600)
+    assert "DEMO-OK" in out

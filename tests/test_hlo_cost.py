@@ -75,6 +75,70 @@ def test_comment_stripping():
     assert analyze(txt).flops == 2 * 4 * 4 * 4
 
 
+# --- collective grammar edge cases (launch/hlo.py) ---------------------------
+def test_async_pair_counted_once_output_bytes_only():
+    """A -start/-done pair is ONE transfer; the start tuple carries the
+    aliased input AND the result, so summing it double-counts (regression:
+    async all-gathers used to count input+result+done = ~2.5x)."""
+    from repro.launch.hlo import collective_bytes
+    txt = """ENTRY %main (x: f32[128]) -> f32[512] {
+  %x = f32[128] parameter(0)
+  %ags = (f32[128], f32[512]) all-gather-start(%x), replica_groups=[2,4]<=[8], dimensions={0}
+  ROOT %agd = f32[512] all-gather-done(%ags)
+}
+"""
+    s = collective_bytes(txt)
+    count, nbytes, traffic = s.by_kind["all-gather"]
+    assert count == 1                       # -done skipped
+    assert nbytes == 512 * 4                # result only, not input+result
+    assert traffic == (4 - 1) / 4 * 512 * 4
+
+
+def test_bare_variadic_tuple_sums():
+    """A synchronous variadic all-reduce reduces distinct buffers: its
+    tuple elements are all results and DO sum."""
+    from repro.launch.hlo import collective_bytes
+    txt = """ENTRY %main (a: f32[64], b: f32[32]) -> (f32[64], f32[32]) {
+  %a = f32[64] parameter(0)
+  %b = f32[32] parameter(1)
+  ROOT %ar = (f32[64], f32[32]) all-reduce(%a, %b), replica_groups={{0,1},{2,3}}, to_apply=%add
+}
+"""
+    s = collective_bytes(txt)
+    count, nbytes, _ = s.by_kind["all-reduce"]
+    assert count == 1 and nbytes == (64 + 32) * 4
+
+
+def test_explicit_group_list_and_permute_pairs():
+    from repro.launch.hlo import collective_bytes, group_size
+    assert group_size("... replica_groups={{0,1,2,3},{4,5,6,7}} ...") == 4
+    assert group_size("... replica_groups=[2,4]<=[8] ...") == 4
+    assert group_size("... source_target_pairs={{0,1},{1,0}} ...") == 2
+    txt = """ENTRY %main (x: f32[256]) -> f32[256] {
+  %x = f32[256] parameter(0)
+  ROOT %cp = f32[256] collective-permute(%x), source_target_pairs={{0,1},{1,2},{2,3}}
+}
+"""
+    s = collective_bytes(txt)
+    count, nbytes, traffic = s.by_kind["collective-permute"]
+    assert count == 1 and nbytes == 1024
+    assert traffic == 1024                  # one hop, no ring factor
+
+
+def test_unknown_dtype_surfaced_not_dropped():
+    from repro.launch.hlo import collective_bytes
+    txt = """ENTRY %main (x: f4e2m1[256]) -> f4e2m1[256] {
+  %x = f4e2m1[256] parameter(0)
+  %ar = f4e2m1[256] all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+  ROOT %ar2 = f32[16] all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+    s = collective_bytes(txt)
+    assert "f4e2m1" in s.unknown_dtypes     # flagged for the auditor
+    # the known-dtype op is still counted
+    assert s.by_kind["all-reduce"][1] == 16 * 4
+
+
 def test_collective_weighted_by_trips():
     import os
     import subprocess
