@@ -28,6 +28,8 @@ MODULES = [
     #  (CHAOS_GATE=1 enforces convergence/detection/zero-FP budgets)
     ("roofline", "benchmarks.roofline"),              # §Roofline (dry-run)
     ("kern", "benchmarks.kernels_bench"),             # kernel microbench
+    ("serving", "benchmarks.serving_bench"),          # serving stack
+    #  (SERVING_GATE=1 enforces CB-speedup + planner-vs-naive budgets)
 ]
 
 # modules with an accuracy_budget.json gate and the env var that arms it
@@ -37,6 +39,7 @@ GATES = {
     "memory_accuracy": "MEM_ACCURACY_GATE",
     "chaos": "CHAOS_GATE",
     "kern": "KERNELS_GATE",
+    "serving": "SERVING_GATE",
 }
 
 REPORT_PATH = os.path.join(

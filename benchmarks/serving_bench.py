@@ -1,0 +1,161 @@
+"""Serving-stack benchmark: continuous batching vs static, planner vs naive.
+
+Two claims, both gated by ``accuracy_budget.json`` when ``SERVING_GATE=1``
+(the ``serving-bench`` CI job):
+
+* **Scheduler** — real decode on a reduced model over a straggler-heavy
+  mix (per 8 requests: one 96-token straggler + seven 4-token shorts).
+  The static ``BatchedServer`` pays one full drain per batch — every
+  batch waits out its straggler, so 4 batches cost ~4x96 decode steps
+  even with dead-row compaction.  ``ContinuousBatchingServer`` admits
+  behind finished shorts and runs all stragglers concurrently (~1x96
+  steps), so steady-state tok/s must improve by at least
+  ``serving_cb_speedup_min``.  Both servers replay the workload once
+  untimed first, so every power-of-2 batch shape is compiled before the
+  timer starts (the launch/serve.py warmup discipline).
+* **Planner** — simulated $/token on a 2-zone heterogeneous pool where
+  the *plentiful* pool is the expensive one (32x A100-40 vs 16x
+  RTX-3090).  The capacity-chasing naive baseline parks the fleet on the
+  A100 pool; the ``ServingObjective`` search must find an SLO-feasible
+  plan at no more than ``serving_planner_vs_naive_ratio_max`` of the
+  naive $/token.
+"""
+import json
+import os
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import cluster as cl
+from repro.core.planner.objectives import ServingObjective
+from repro.core.planner.search import SailorPlanner
+from repro.core.planner.serving import naive_homogeneous_serving
+from repro.core.profiler.analytic import ServeJob
+from repro.models import model as model_lib
+from repro.serve.scheduler import ContinuousBatchingServer
+from repro.serve.serve_step import BatchedServer, Request
+
+from benchmarks.common import emit
+
+BUDGET_PATH = pathlib.Path(__file__).parent / "accuracy_budget.json"
+
+SLOTS = 8
+N_BATCHES = 4
+PROMPT_LEN = 16
+STRAGGLER_NEW = 96
+SHORT_NEW = 4
+MAX_CTX = 128
+
+
+def _straggler_mix(cfg, seed: int):
+    """Per SLOTS requests: one straggler, SLOTS-1 shorts."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for b in range(N_BATCHES):
+        for i in range(SLOTS):
+            reqs.append(Request(
+                rid=b * SLOTS + i,
+                prompt=rng.integers(0, cfg.vocab_size, PROMPT_LEN,
+                                    dtype=np.int32),
+                max_new_tokens=STRAGGLER_NEW if i == 0 else SHORT_NEW))
+    return reqs
+
+
+def _reset(reqs):
+    for r in reqs:
+        r.output.clear()
+        r.done = False
+
+
+def _timed_run(server, reqs):
+    warm = [Request(rid=-1 - r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens) for r in reqs]
+    server.run(warm)                       # compile every shape, untimed
+    t0 = time.perf_counter()
+    server.run(reqs)
+    dt = time.perf_counter() - t0
+    return sum(len(r.output) for r in reqs) / dt, dt
+
+
+def bench_continuous_batching():
+    cfg = get_config("qwen1_5_0_5b").reduced()
+    params = model_lib.init(cfg, jax.random.PRNGKey(0))
+    reqs = _straggler_mix(cfg, seed=0)
+
+    static = BatchedServer(cfg, params, max_len=MAX_CTX, batch_size=SLOTS)
+    tps_static, dt_s = _timed_run(static, reqs)
+    steps_static = static.decode_steps // 2        # two identical runs
+    _reset(reqs)
+    cb = ContinuousBatchingServer(cfg, params, max_slots=SLOTS,
+                                  max_ctx=MAX_CTX)
+    tps_cb, dt_c = _timed_run(cb, reqs)
+    steps_cb = cb.stats.decode_steps // 2
+
+    speedup = tps_cb / tps_static
+    emit("serving/static", dt_s * 1e6,
+         f"tok_s={tps_static:.0f} decode_steps={steps_static}")
+    emit("serving/continuous", dt_c * 1e6,
+         f"tok_s={tps_cb:.0f} decode_steps={steps_cb} "
+         f"preempted={cb.stats.n_preempted // 2}")
+    emit("serving/cb_speedup", 0.0,
+         f"{speedup:.2f}x steps {steps_static}->{steps_cb}")
+    return speedup
+
+
+def bench_planner_vs_naive():
+    job = ServeJob(cfg=get_config("smollm_360m"), prompt_len=256,
+                   max_new_tokens=128, decode_batch=8, arrival_rps=4.0)
+    # plentiful pool = expensive pool: capacity-chasing goes wrong
+    cluster = cl.multi_zone({
+        "us-central1-a": ("us-central1", {"A100-40": 32}),
+        "eu-west4-a": ("eu-west4", {"RTX-3090": 16}),
+    })
+    objective = ServingObjective(slo_ttft_p99_s=2.0, slo_tpot_p99_s=0.2)
+    planner = SailorPlanner(job)
+    res = planner.plan(cluster, objective)
+    best = res.best
+    naive = naive_homogeneous_serving(planner, cluster)
+    assert best is not None and naive is not None and naive.valid
+    ratio = best.cost_per_token / naive.cost_per_token
+    emit("serving/planner", res.search_time_s * 1e6,
+         f"$per_tok={best.cost_per_token:.3g} "
+         f"ttft_p99={best.ttft_p99:.3f}s tpot_p99={best.tpot_p99:.4f}s "
+         f"replicas={best.plan.n_replicas} slo_ok={objective.satisfies(best)}")
+    emit("serving/naive", 0.0,
+         f"$per_tok={naive.cost_per_token:.3g} "
+         f"replicas={naive.plan.n_replicas}")
+    emit("serving/planner_vs_naive", 0.0, f"ratio={ratio:.3f}")
+    return ratio, objective.satisfies(best)
+
+
+def run(gate=None):
+    if gate is None:
+        gate = os.environ.get("SERVING_GATE", "") not in ("", "0")
+    speedup = bench_continuous_batching()
+    ratio, slo_ok = bench_planner_vs_naive()
+    if gate:
+        budget = json.loads(BUDGET_PATH.read_text())
+        floor = budget["serving_cb_speedup_min"]
+        cap = budget["serving_planner_vs_naive_ratio_max"]
+        if speedup < floor:
+            raise SystemExit(
+                f"serving gate: continuous batching {speedup:.2f}x < "
+                f"required {floor}x over static batching")
+        if not slo_ok:
+            raise SystemExit(
+                "serving gate: planner's best plan violates the SLO")
+        if ratio > cap:
+            raise SystemExit(
+                f"serving gate: planner $/token ratio {ratio:.3f} vs naive "
+                f"exceeds budget {cap}")
+        emit("serving/gate", 0.0,
+             f"PASS cb_speedup={speedup:.2f}x>={floor} "
+             f"ratio={ratio:.3f}<={cap} slo_ok={slo_ok}")
+    return speedup, ratio
+
+
+if __name__ == "__main__":
+    run()

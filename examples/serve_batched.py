@@ -1,4 +1,14 @@
-"""Batched serving example: prefill + lockstep greedy decode with KV cache.
+"""Serving example: plan a placement under an SLO, then serve locally.
+
+Two halves, mirroring the paper's workflow for the inference fleet:
+
+1. **Plan.**  A ``ServeJob`` + 2-zone heterogeneous cluster go through
+   ``SailorPlanner`` with a ``ServingObjective`` (min $/token s.t. TTFT /
+   TPOT p99 SLOs).  The planner sizes the replica fleet, picks types and
+   zones, and memory-gates each replica on KV-aware peak bytes.
+2. **Serve.**  The chosen decode batch size then drives a local
+   ``ContinuousBatchingServer`` on a reduced model — paged KV cache,
+   per-step admission, the same scheduler the simulator models.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -8,27 +18,61 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import cluster as cl
+from repro.core.planner.objectives import ServingObjective
+from repro.core.planner.search import SailorPlanner
+from repro.core.profiler.analytic import ServeJob
 from repro.models import model as model_lib
-from repro.serve.serve_step import BatchedServer, Request
+from repro.serve.scheduler import ContinuousBatchingServer
+from repro.serve.serve_step import Request
 
 
-def main() -> None:
+def plan_placement():
+    job = ServeJob(cfg=get_config("smollm_360m"), prompt_len=256,
+                   max_new_tokens=128, decode_batch=8, arrival_rps=4.0)
+    cluster = cl.multi_zone({
+        "us-central1-a": ("us-central1", {"A100-40": 8}),
+        "eu-west4-a": ("eu-west4", {"RTX-3090": 16}),
+    })
+    objective = ServingObjective(slo_ttft_p99_s=2.0, slo_tpot_p99_s=0.2)
+    planner = SailorPlanner(job)
+    t0 = time.time()
+    res = planner.plan(cluster, objective)
+    best = res.best
+    print(f"planned in {time.time() - t0:.1f}s "
+          f"({res.n_evaluated} candidates simulated)")
+    print(best.plan.describe())
+    print(f"  ttft_p99={best.ttft_p99:.3f}s tpot_p99={best.tpot_p99 * 1e3:.1f}ms "
+          f"tok/s={best.tokens_per_s:.0f} $/token={best.cost_per_token:.3g}")
+    return best
+
+
+def serve_locally(decode_batch: int) -> None:
     cfg = get_config("qwen1_5_0_5b").reduced()
     params = model_lib.init(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 8 + i,
                                         dtype=np.int32),
-                    max_new_tokens=12)
+                    max_new_tokens=4 + 2 * i)
             for i in range(8)]
-    server = BatchedServer(cfg, params, max_len=64, batch_size=4)
+    server = ContinuousBatchingServer(cfg, params, max_slots=decode_batch,
+                                      max_ctx=64)
     t0 = time.time()
     server.run(reqs)
     dt = time.time() - t0
     total = sum(len(r.output) for r in reqs)
-    print(f"served {len(reqs)} requests / {total} tokens in {dt:.1f}s")
+    s = server.stats
+    print(f"served {len(reqs)} requests / {total} tokens in {dt:.1f}s "
+          f"(steps={s.decode_steps} row_steps={s.decode_row_steps} "
+          f"peak_pages={s.peak_pages})")
     for r in reqs[:3]:
         print(f"  req{r.rid}: prompt_len={len(r.prompt)} -> {r.output}")
+
+
+def main() -> None:
+    best = plan_placement()
+    serve_locally(best.plan.decode_batch)
 
 
 if __name__ == "__main__":

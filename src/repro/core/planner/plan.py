@@ -102,6 +102,68 @@ class ParallelPlan:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """A serving placement: N decode replicas (each a full model copy at
+    some TP on some GPU type in some zone) plus, when prefill/decode are
+    disaggregated, a separate pool of prefill replicas that stream freshly
+    built KV pages to the decoders.  The serving sibling of
+    :class:`ParallelPlan` — replica *count* and the disaggregation split
+    are the plan dimensions the serving planner searches over, instead of
+    pp/dp/mbs."""
+
+    decode: Tuple[StageReplica, ...]         # one entry per decode replica
+    prefill: Tuple[StageReplica, ...] = ()   # empty => unified replicas
+    decode_batch: int = 8                    # continuous-batching slots
+    page_size: int = 16                      # paged-KV page, tokens
+    max_ctx: int = 1024                      # per-request context budget
+
+    @property
+    def disaggregated(self) -> bool:
+        return len(self.prefill) > 0
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.decode)
+
+    @property
+    def n_chips(self) -> int:
+        return (sum(r.n_chips for r in self.decode)
+                + sum(r.n_chips for r in self.prefill))
+
+    def chips_by_type(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.decode + self.prefill:
+            out[r.gpu_type] = out.get(r.gpu_type, 0) + r.n_chips
+        return out
+
+    def zones(self) -> List[str]:
+        return sorted({r.zone for r in self.decode + self.prefill})
+
+    def validate(self) -> None:
+        assert self.decode, "serving plan needs at least one decode replica"
+        assert self.decode_batch >= 1 and self.page_size >= 1
+        assert self.max_ctx >= 1
+
+    def describe(self) -> str:
+        def pool(tag: str, reps: Tuple[StageReplica, ...]) -> str:
+            kinds: Dict[Tuple[str, int, str], int] = {}
+            for r in reps:
+                key = (r.gpu_type, r.tp, r.zone)
+                kinds[key] = kinds.get(key, 0) + 1
+            desc = ", ".join(f"{n}x({g},tp={t},{z})"
+                             for (g, t, z), n in sorted(kinds.items()))
+            return f"  {tag}: {desc}"
+        lines = [f"serving R={self.n_replicas}"
+                 f"{' disagg' if self.disaggregated else ''} "
+                 f"slots={self.decode_batch} page={self.page_size} "
+                 f"ctx={self.max_ctx} chips={self.n_chips}",
+                 pool("decode", self.decode)]
+        if self.prefill:
+            lines.append(pool("prefill", self.prefill))
+        return "\n".join(lines)
+
+
 def homogeneous_plan(gpu_type: str, zone: str, pp: int, dp: int, tp: int,
                      n_layers: int, mbs: int, global_batch: int
                      ) -> ParallelPlan:

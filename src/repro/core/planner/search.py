@@ -55,7 +55,7 @@ from repro.core.planner import heuristics as H
 from repro.core.planner.dp_solver import (CandidateMemo, DPSolver,
                                           StageChoice)
 from repro.core.planner.objectives import (MAX_THROUGHPUT, MIN_COST,
-                                           Objective)
+                                           Objective, ServingObjective)
 from repro.core.planner.plan import (ParallelPlan, StageConfig, StageReplica)
 from repro.core.profiler.analytic import JobProfile, TrainJob
 from repro.core.simulator import memory as mem_mod
@@ -289,7 +289,14 @@ class SailorPlanner:
           shape rarely jumps on a small capacity change, and the caller
           falls back to an unrestricted search when the restricted one
           finds nothing).
+
+        A :class:`ServingObjective` dispatches to the serving search
+        (replica count / disaggregation dimensions instead of pp/mbs/d);
+        the warm-start hooks above are training-only.
         """
+        if isinstance(objective, ServingObjective):
+            from repro.core.planner import serving as serving_search
+            return serving_search.plan_serving(self, cluster, objective)
         result = self._search(cluster, objective, incumbent=incumbent,
                               reuse=reuse, reuse_scores=reuse_scores,
                               changed_pools=changed_pools,

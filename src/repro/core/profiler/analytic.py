@@ -48,6 +48,44 @@ class TrainJob:
     remat: str = "full"        # matches runtime default
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeJob:
+    """An inference workload: the serving sibling of :class:`TrainJob`.
+
+    ``JobProfile`` is workload-generic — it only reads ``cfg``, ``seq_len``,
+    ``global_batch`` and ``remat`` — so a ``ServeJob`` maps its serving
+    vocabulary onto those names (``seq_len`` = prompt length, the sequence
+    the *prefill* phase runs; ``global_batch`` = continuous-batching slots
+    per replica, the batch the *decode* phase runs) and adds the
+    serving-only knobs: per-request context budget, the paged-KV page
+    size, and the diurnal traffic model of the user population
+    (``core/simulator/serving.TrafficModel`` is built from these).
+    """
+    cfg: ModelConfig
+    prompt_len: int = 512
+    max_new_tokens: int = 128
+    decode_batch: int = 8        # continuous-batching slots per replica
+    page_size: int = 16          # paged-KV page, tokens
+    # traffic model (diurnal load of the user population)
+    arrival_rps: float = 1.0     # mean request arrival rate
+    diurnal_amp: float = 0.5     # rate swings +-amp around the mean
+    diurnal_period_s: float = 86400.0
+    remat: str = "full"          # unused for serving; JobProfile compat
+
+    @property
+    def seq_len(self) -> int:
+        return self.prompt_len
+
+    @property
+    def global_batch(self) -> int:
+        return self.decode_batch
+
+    @property
+    def max_ctx(self) -> int:
+        """Per-request context budget: prompt + generation."""
+        return self.prompt_len + self.max_new_tokens
+
+
 class JobProfile:
     """Layer-kind cost tables for one training job."""
 
@@ -141,7 +179,8 @@ class JobProfile:
         return mbs * s * self._inner_width() * DTYPE_BYTES
 
     def _act_work_bytes(self, kind: str, mbs: int,
-                        act_bytes: int = DTYPE_BYTES) -> int:
+                        act_bytes: int = DTYPE_BYTES,
+                        phase: str = "train") -> int:
         """Live working set of ONE layer while it executes (fwd) or is
         rematerialized during backward — the transient on top of the
         *stored* activations counted by :meth:`_act_store_bytes`.
@@ -161,6 +200,10 @@ class JobProfile:
         if kind == "embed":
             return tokens * cfg.d_model * act_bytes
         if kind == "head":
+            if phase == "serve":
+                # inference: one fp32 logits copy, no gradient stream.
+                return int(tokens * cfg.vocab_size * GRAD_BYTES
+                           + tokens * cfg.d_model * act_bytes)
             # fp32 logits and their gradient live simultaneously in the CE
             # backward (chunked-CE reduces this; modeled unchunked).
             chunk = cfg.logits_chunk or self.job.seq_len
@@ -256,6 +299,123 @@ class JobProfile:
             act_out_bytes=tokens * cfg.d_model * DTYPE_BYTES,
             act_store_bytes=self._act_store_bytes(kind, mbs))
 
+    # --- decode phase (serving) --------------------------------------------------
+    def _decode_flops_per_token(self, kind: str, ctx: int) -> float:
+        """FLOPs to decode ONE token through one layer with ``ctx`` tokens
+        of live context.  Matmuls shrink to matrix-vector products (2x
+        active params); attention reads the whole KV cache (no causal
+        halving — the single query attends everything)."""
+        cfg = self.cfg
+        if kind == "embed":
+            return 0.0
+        if kind == "head":
+            return 2 * cfg.d_model * cfg.vocab_size
+        if cfg.family in ("ssm", "hybrid"):
+            matmul = 2 * cfg.ssm_layer_params()
+            # recurrent state update: h (B,H,P,N) read-modify-write
+            state = 4 * cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state
+            flops = matmul + state
+            if cfg.family == "hybrid":
+                ctx_eff = min(ctx, cfg.window) if cfg.window else ctx
+                shared = (2 * (cfg.attn_params() + cfg.ffn_params())
+                          + 4 * ctx_eff * cfg.n_heads * cfg.hd)
+                flops += shared / cfg.attn_every
+            return flops
+        active = (cfg.attn_params()
+                  + (cfg.top_k * cfg.ffn_params()
+                     + cfg.d_model * cfg.n_experts
+                     if cfg.family == "moe" else cfg.ffn_params()))
+        ctx_eff = min(ctx, cfg.window) if cfg.window else ctx
+        return 2 * active + 4 * ctx_eff * cfg.n_heads * cfg.hd
+
+    def _kv_read_bytes(self, kind: str, batch: int, ctx: int, tp: int) -> int:
+        """Bytes of cache state one layer streams per decode step."""
+        cfg = self.cfg
+        if kind != "block":
+            return 0
+        if cfg.family in ("ssm", "hybrid"):
+            # SSM state (H, P, N) fp32 read+write; constant in ctx.
+            ssm = 2 * batch * cfg.ssm_nheads * cfg.ssm_headdim \
+                * cfg.ssm_state * GRAD_BYTES
+            if cfg.family == "hybrid":
+                ctx_eff = min(ctx, cfg.window) if cfg.window else ctx
+                ssm += (2 * batch * ctx_eff * cfg.n_kv_heads * cfg.hd
+                        * DTYPE_BYTES) // max(cfg.attn_every, 1)
+            return ssm // tp
+        ctx_eff = min(ctx, cfg.window) if cfg.window else ctx
+        return 2 * batch * ctx_eff * cfg.n_kv_heads * cfg.hd \
+            * DTYPE_BYTES // tp
+
+    def _decode_kernel_ops(self, kind: str, tp: int, batch: int, ctx: int
+                           ) -> List[Tuple[str, Tuple[int, ...], int]]:
+        """Measured-table hook for the decode step (flash_decode tables
+        from PR 6's ``flash_attention_decode`` kernel)."""
+        cfg = self.cfg
+        if kind == "embed":
+            return []
+        if kind == "head":
+            return [("rmsnorm", (batch, cfg.d_model), 1)]
+        ops: List[Tuple[str, Tuple[int, ...], int]] = [
+            ("rmsnorm", (batch, cfg.d_model), 2)]
+        if cfg.family in ("ssm", "hybrid"):
+            return ops
+        heads = max(cfg.n_heads // tp, 1)
+        ctx_eff = min(ctx, cfg.window) if cfg.window else ctx
+        ops.append(("flash_decode", (batch * heads, ctx_eff, cfg.hd), 1))
+        return ops
+
+    def decode_cost(self, kind: str, gpu_type: str, tp: int, batch: int,
+                    ctx: int) -> float:
+        """Seconds one layer takes for ONE decode step of a ``batch`` of
+        sequences at ``ctx`` live context (per TP shard)."""
+        return self._decode_cost(kind, gpu_type, tp, batch, ctx,
+                                 kernel_costs.epoch())
+
+    @functools.lru_cache(maxsize=100_000)
+    def _decode_cost(self, kind: str, gpu_type: str, tp: int, batch: int,
+                     ctx: int, _table_epoch: int) -> float:
+        cfg = self.cfg
+        acc = get_accelerator(gpu_type)
+        flops = self._decode_flops_per_token(kind, ctx) * batch / tp
+        # decode is bandwidth-bound: full weight read per step + KV stream
+        w_bytes = self._layer_params(kind) * DTYPE_BYTES / tp
+        kv_bytes = self._kv_read_bytes(kind, batch, ctx, tp)
+        a_bytes = 2 * batch * cfg.d_model * DTYPE_BYTES
+        t = max(flops / (acc.peak_flops * acc.efficiency),
+                (w_bytes + kv_bytes + a_bytes) / acc.mem_bw)
+        table = kernel_costs.get_kernel_table(gpu_type)
+        if table is not None:
+            delta = 0.0
+            for op, shape, count in self._decode_kernel_ops(
+                    kind, tp, batch, ctx):
+                t_meas = table.lookup(op, shape, cfg.dtype)
+                if t_meas is None:
+                    continue
+                delta += count * (t_meas - kernel_costs.roofline_time(
+                    op, shape, cfg.dtype, acc))
+            t = max(t + delta, 0.1 * t)
+        if tp > 1 and kind == "block":
+            link = LinkSpec(f"intra-{gpu_type}", alpha=5e-6,
+                            beta=acc.intra_node_bw)
+            t += 2 * network.all_reduce_time(
+                link, batch * cfg.d_model * DTYPE_BYTES, tp)
+        return t
+
+    def stage_decode_time(self, layer_lo: int, layer_hi: int, gpu_type: str,
+                          tp: int, batch: int, ctx: int) -> float:
+        """Seconds per decode step for layers [lo, hi) — the TPOT
+        contribution of one pipeline stage."""
+        kinds = self.layer_kinds()
+        return sum(self.decode_cost(k, gpu_type, tp, batch, ctx)
+                   for k in kinds[layer_lo:layer_hi])
+
+    def stage_prefill_time(self, layer_lo: int, layer_hi: int,
+                           gpu_type: str, tp: int, batch: int) -> float:
+        """Forward-only seconds for a prefill of ``batch`` prompts of
+        ``job.seq_len`` tokens through layers [lo, hi)."""
+        fwd, _, _ = self.stage_cost(layer_lo, layer_hi, gpu_type, tp, batch)
+        return fwd
+
     # --- aggregates used by planner/simulator ------------------------------------
     def stage_cost(self, layer_lo: int, layer_hi: int, gpu_type: str,
                    tp: int, mbs: int) -> Tuple[float, float, float]:
@@ -280,13 +440,15 @@ class JobProfile:
                    for k in kinds[layer_lo:layer_hi])
 
     def stage_act_work(self, layer_lo: int, layer_hi: int, mbs: int,
-                       act_bytes: int = DTYPE_BYTES) -> int:
+                       act_bytes: int = DTYPE_BYTES,
+                       phase: str = "train") -> int:
         """Peak transient working set of the stage: one layer executes (or
         rematerializes) at a time, so the stage-wide peak is the widest
         layer in the range, not the sum.  Absolute bytes at ``act_bytes``
-        activation width (the fp32 CE term does not scale with it)."""
+        activation width (the fp32 CE term does not scale with it).
+        ``phase="serve"`` drops the gradient streams (forward-only)."""
         kinds = self.layer_kinds()
-        return max((self._act_work_bytes(k, mbs, act_bytes)
+        return max((self._act_work_bytes(k, mbs, act_bytes, phase)
                     for k in kinds[layer_lo:layer_hi]), default=0)
 
     def boundary_bytes(self, mbs: int) -> int:

@@ -32,6 +32,7 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core.planner.plan import ParallelPlan
+from repro.core.profiler import kernel_costs
 from repro.core.profiler.analytic import DTYPE_BYTES, JobProfile
 from repro.core.profiler.hw_specs import get_accelerator
 
@@ -94,12 +95,20 @@ def in_flight_microbatches(pp: int, stage_idx: int,
 def stage_memory_components(profile: JobProfile, layer_lo: int,
                             layer_hi: int, mbs: int, tp: int,
                             in_flight: float,
-                            mem_cfg: MemoryModelConfig = DEFAULT_MEM
-                            ) -> Dict[str, float]:
+                            mem_cfg: MemoryModelConfig = DEFAULT_MEM,
+                            kv_bytes: float = 0.0,
+                            phase: str = "train") -> Dict[str, float]:
     """Structural bytes of one TP shard, split into the two streams the
     calibration fits independently: ``static`` (params + grads + optimizer
     + comm buffers — exact dtype arithmetic) and ``act`` (stored + working
-    activations — where XLA's workspace/padding multiplier lives)."""
+    activations — where XLA's workspace/padding multiplier lives).
+
+    ``kv_bytes`` is the *unsharded* resident KV/state-cache footprint of
+    this stage's share of the model (serving workloads; see
+    :func:`kv_cache_bytes`) — it rides the ``static`` stream because,
+    like the parameters, it is exact dtype arithmetic with no XLA
+    workspace multiplier.  ``phase="serve"`` drops the gradient streams
+    from the transient working set."""
     act_scale = mem_cfg.act_bytes / DTYPE_BYTES
     params = profile.stage_params(layer_lo, layer_hi)
     m_model = params / tp * mem_cfg.mul_factor
@@ -111,9 +120,9 @@ def stage_memory_components(profile: JobProfile, layer_lo: int,
     # the working set takes the dtype width directly: its fp32 CE-logits
     # term must not scale with the activation dtype
     working = profile.stage_act_work(layer_lo, layer_hi, mbs,
-                                     mem_cfg.act_bytes)
+                                     mem_cfg.act_bytes, phase)
     m_act = (in_flight * act_store + working) / tp
-    return {"static": m_model + m_comm, "act": m_act}
+    return {"static": m_model + m_comm + kv_bytes / tp, "act": m_act}
 
 
 def combine_peak(static: float, act: float,
@@ -127,15 +136,19 @@ def combine_peak(static: float, act: float,
 
 def stage_peak_bytes(profile: JobProfile, layer_lo: int, layer_hi: int,
                      mbs: int, tp: int, in_flight: float,
-                     mem_cfg: MemoryModelConfig = DEFAULT_MEM) -> float:
+                     mem_cfg: MemoryModelConfig = DEFAULT_MEM,
+                     kv_bytes: float = 0.0,
+                     phase: str = "train") -> float:
     """THE shared peak-bytes kernel: one TP shard of one stage replica.
 
     Every feasibility decision (simulate -> planner -> baselines -> manager
-    replans) routes through here, so the model cannot drift between the
-    search-time precompute and the final OOM check.
+    replans, training AND serving) routes through here, so the model cannot
+    drift between the search-time precompute and the final OOM check.
+    Serving callers pass their resident paged-KV footprint via ``kv_bytes``
+    and ``phase="serve"`` (no grads); training callers leave the defaults.
     """
     c = stage_memory_components(profile, layer_lo, layer_hi, mbs, tp,
-                                in_flight, mem_cfg)
+                                in_flight, mem_cfg, kv_bytes, phase)
     return combine_peak(c["static"], c["act"], mem_cfg)
 
 
@@ -196,6 +209,71 @@ def min_tp_for_stage(profile: JobProfile, plan_pp: int, stage_idx: int,
     for tp in sorted(tp_options):
         peak = stage_peak_bytes(profile, layer_lo, layer_hi, mbs, tp,
                                 in_flight, mem_cfg)
+        if peak <= usable:
+            return tp
+    return None
+
+
+# --- serving (params + KV residency, no grads/optimizer) ----------------------
+
+def kv_cache_bytes(cfg, batch: int, ctx: int, page_size: int = 16) -> int:
+    """Resident bytes of one replica's paged KV/state cache: ``batch``
+    sequences at ``ctx`` live tokens each, page-granular —
+    ``ceil(ctx/page)`` pages of ``page_size`` tokens are allocated per
+    sequence.  Family-aware via the model's own ``cache_decls``: attention
+    K/V grow with context (SWA archs cap at the window because the decl
+    does), SSM conv/state buffers are constant-size, hybrids mix both."""
+    from repro.models.model import cache_decls  # lazy: models pull in jax
+    page = max(int(page_size), 1)
+    pages = max(-(-int(ctx) // page), 1)
+    dt = kernel_costs.DTYPE_BYTES.get(cfg.dtype, DTYPE_BYTES)
+    total = 0
+    for name, decl in cache_decls(cfg, batch, pages * page).items():
+        if name == "len":
+            continue
+        n = 1
+        for d in decl.shape:
+            n *= d
+        total += n * dt
+    return total
+
+
+def serving_mem_cfg(base: MemoryModelConfig = DEFAULT_MEM
+                    ) -> MemoryModelConfig:
+    """The memory model an inference replica actually runs: bf16 params
+    only (no grads / optimizer moments / master copy / DP buckets)."""
+    return dataclasses.replace(base, grad_bytes=0, opt_bytes=0,
+                               master_bytes=0, dp_bucket_frac=0.0)
+
+
+def serving_stage_peak_bytes(profile: JobProfile, layer_lo: int,
+                             layer_hi: int, batch: int, tp: int,
+                             kv_bytes: float,
+                             mem_cfg: Optional[MemoryModelConfig] = None
+                             ) -> float:
+    """Peak bytes of one TP shard of a serving-stage replica: params + its
+    share of the paged KV cache + the transient prefill working set.
+    ``kv_bytes`` is the stage's unsharded cache footprint (scale the
+    replica-wide :func:`kv_cache_bytes` by the stage's layer fraction).
+    Routes through :func:`stage_peak_bytes` — same kernel as training."""
+    if mem_cfg is None:
+        mem_cfg = serving_mem_cfg()
+    return stage_peak_bytes(profile, layer_lo, layer_hi, batch, tp,
+                            in_flight=0.0, mem_cfg=mem_cfg,
+                            kv_bytes=kv_bytes, phase="serve")
+
+
+def min_tp_for_serving(profile: JobProfile, layer_lo: int, layer_hi: int,
+                       batch: int, gpu_type: str, tp_options,
+                       kv_bytes: float,
+                       mem_cfg: Optional[MemoryModelConfig] = None):
+    """Frenzy-style memory-aware selection: smallest TP of ``gpu_type``
+    where params + KV residency fit usable HBM.  None if even max TP
+    does not fit."""
+    usable = get_accelerator(gpu_type).usable_mem_bytes
+    for tp in sorted(tp_options):
+        peak = serving_stage_peak_bytes(profile, layer_lo, layer_hi,
+                                        batch, tp, kv_bytes, mem_cfg)
         if peak <= usable:
             return tp
     return None

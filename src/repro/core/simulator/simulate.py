@@ -15,6 +15,7 @@ import math
 from typing import Dict, List, Optional
 
 from repro.core.cluster import ClusterSpec
+from repro.core.planner import plan as serving_plan
 from repro.core.planner.plan import ParallelPlan
 from repro.core.profiler.analytic import JobProfile
 from repro.core.simulator import cost as cost_mod
@@ -55,6 +56,15 @@ def simulate(profile: JobProfile, plan: ParallelPlan,
              cluster: ClusterSpec,
              mem_cfg: mem_mod.MemoryModelConfig = mem_mod.DEFAULT_MEM,
              engine_cfg: Optional[eng.EngineConfig] = None) -> SimResult:
+    if isinstance(plan, serving_plan.ServingPlan):
+        # workload-generic facade: a ServingPlan routes to the serving-mode
+        # engine (horizon-based, tail-latency report) instead of forking
+        # the caller on plan type; training-only memory streams are zeroed
+        # while calibration knobs (fragmentation, overhead) carry over
+        from repro.core.simulator import serving as serving_mod
+        return serving_mod.simulate_serving(
+            profile, plan, cluster,
+            mem_cfg=mem_mod.serving_mem_cfg(mem_cfg))
     plan.validate()
     if engine_cfg is not None and \
             (engine_cfg.schedule, engine_cfg.virtual_stages) != \

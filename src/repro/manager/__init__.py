@@ -4,6 +4,8 @@ Monitor availability feeds, replan incrementally on every change, price
 each transition, and reconfigure the elastic trainer kill-free (or roll
 back, or defer).  See DESIGN.md §11.
 """
+from repro.manager.autoscale import (AutoscaleConfig, AutoscaleDecision,
+                                     ServingController, plan_fits_capacity)
 from repro.manager.controller import (Controller, ControllerConfig,
                                       fit_runtime_plan)
 from repro.manager.events import (CapacityDown, CapacityUp, ClusterEvent,
@@ -16,10 +18,12 @@ from repro.manager.transition import (DEFER, RESHARD, ROLLBACK, ROUTE_AROUND,
                                       TransitionModel)
 
 __all__ = [
-    "AvailabilityMonitor", "CapacityDown", "CapacityUp", "ClusterEvent",
+    "AutoscaleConfig", "AutoscaleDecision", "AvailabilityMonitor",
+    "CapacityDown", "CapacityUp", "ClusterEvent",
     "Controller", "ControllerConfig", "DEFER", "EventBus",
     "IncrementalReplanner", "LinkDegraded", "ListFeed", "NodeFailure",
-    "PriceChange", "RESHARD", "ROLLBACK", "ROUTE_AROUND", "Straggler",
+    "PriceChange", "RESHARD", "ROLLBACK", "ROUTE_AROUND",
+    "ServingController", "Straggler",
     "TraceFeed", "TransitionConfig", "TransitionDecision", "TransitionModel",
-    "fit_runtime_plan",
+    "fit_runtime_plan", "plan_fits_capacity",
 ]

@@ -205,9 +205,14 @@ def attn_window_linear(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def attn_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
                 cache_len: jax.Array, window: int = 0,
                 impl: str = "naive") -> jax.Array:
-    """Single-token decode. q: (B,1,H,hd); caches: (B,S,K,hd)."""
+    """Single-token decode. q: (B,1,H,hd); caches: (B,S,K,hd).
+
+    ``cache_len`` may be a scalar (lockstep batch, all rows at the same
+    position) or a (B,) vector (continuous batching: rows joined at
+    different times, each masks its own context).
+    """
     b, _, h, hd = q.shape
-    if impl == "pallas" and window == 0:
+    if impl == "pallas" and window == 0 and jnp.ndim(cache_len) == 0:
         from repro.kernels import ops as kops
         return kops.flash_attention_decode(q, k_cache, v_cache,
                                            cache_len=cache_len)
@@ -216,10 +221,11 @@ def attn_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
     scale = 1.0 / math.sqrt(hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) * scale
     k_pos = jnp.arange(k_cache.shape[1])
-    mask = k_pos[None] >= cache_len                      # (1, S)
+    lens = jnp.reshape(cache_len, (-1, 1))               # (1,1) or (B,1)
+    mask = k_pos[None] >= lens                           # (1,S) or (B,S)
     if window > 0:
         # ring buffer: valid positions are the last `window` written slots
-        mask = mask | (k_pos[None] < cache_len - window)
+        mask = mask | (k_pos[None] < lens - window)
     s = jnp.where(mask[:, None, None, :], NEG_INF, s)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)

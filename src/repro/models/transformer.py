@@ -219,21 +219,36 @@ def decode(cfg: ModelConfig, params, cache, tokens: jax.Array, *,
     """One decode step. tokens: (B, 1). Returns (logits, new_cache)."""
     b = tokens.shape[0]
     pos = cache["len"]
+    # per-row lengths (B,) support continuous batching: rows admitted at
+    # different times decode in one batch, each at its own position.  A
+    # scalar ``len`` keeps the original lockstep semantics (and the
+    # single-compile property callers rely on).
+    per_row = jnp.ndim(pos) == 1
     x = params["embed"][tokens].astype(cfg.dtype)
-    positions = jnp.asarray(pos)[None]          # absolute position for RoPE
+    positions = pos[:, None] if per_row \
+        else jnp.asarray(pos)[None]             # absolute position for RoPE
     cache_size = cache["k"].shape[2]
     # SWA: ring buffer — slot p%window holds position p; all written slots
     # are within the window by construction, so only unwritten slots are
     # masked (cache_len below) and no extra window mask is needed.
     slot = pos % cache_size if cfg.window else pos
     valid = jnp.minimum(pos + 1, cache_size)
+    if per_row:
+        hot = jnp.arange(cache_size)[None, :] == slot[:, None]   # (B,S)
+        hot = hot[:, :, None, None]
 
     def body(x, lp_and_cache):
         lp, kc, vc = lp_and_cache
         h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = _qkv(cfg, lp, h, positions)
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, 1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, 1)
+        if per_row:
+            kc = jnp.where(hot, k.astype(kc.dtype), kc)
+            vc = jnp.where(hot, v.astype(vc.dtype), vc)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(kc.dtype), slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(vc.dtype), slot, 1)
         o = L.attn_decode(q, kc, vc, cache_len=valid, window=0)
         delta = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), lp["wo"])
         h, x = L.rms_norm_residual(x, delta, lp["ln2"], cfg.norm_eps)

@@ -1,0 +1,248 @@
+"""Continuous-batching scheduler over a paged KV cache.
+
+The static ``BatchedServer`` admits one batch, decodes it to completion,
+and only then starts the next — short requests finish early and their
+slots idle while stragglers drain.  This server admits and retires
+requests at every decode-step boundary:
+
+* **Slots.**  A fixed pool of ``max_slots`` cache rows.  Live requests
+  always occupy the row prefix ``[0, n_live)`` (finish/preempt swaps the
+  last live row down), so a decode step runs on a *prefix slice* of the
+  cache at the next power-of-2 above ``n_live`` — shape-stable for at
+  most log2(max_slots) compiled batch sizes, with dead rows bounded by
+  half the sliced batch.
+* **Pages.**  Admission and per-token growth go through the same
+  ``PagedKVAllocator`` the serving simulator uses: a request is admitted
+  only when a slot AND its prompt's pages are free; growth that finds the
+  pool exhausted preempts the most recently admitted request back to the
+  queue (recompute-style, vLLM semantics).
+* **Per-row positions.**  The cache's ``len`` is a (B,) vector — rows
+  admitted at different times decode together, each masking its own
+  context (``models/transformer.decode`` per-row path).
+
+Transformer families only (dense/moe): continuous batching needs the
+per-row decode path; SSM/hybrid state caches decode lockstep via
+``BatchedServer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.serve.paged_cache import PagedKVAllocator
+from repro.serve.serve_step import Request, make_decode, make_prefill
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class ServerStats:
+    decode_steps: int = 0        # decode_step launches
+    decode_row_steps: int = 0    # sum of sliced batch sizes over launches
+    prefill_calls: int = 0
+    n_preempted: int = 0
+    n_finished: int = 0
+    peak_pages: int = 0
+
+
+class ContinuousBatchingServer:
+    """Admit/evict by page budget; decode a dead-slot-free prefix batch."""
+
+    def __init__(self, cfg: ModelConfig, params, max_slots: int = 8,
+                 max_ctx: int = 512, page_size: int = 16,
+                 total_pages: Optional[int] = None):
+        assert cfg.family in ("dense", "moe"), \
+            "continuous batching needs the per-row transformer decode path"
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_ctx = max_ctx
+        self.page_size = page_size
+        if total_pages is None:
+            total_pages = max_slots * (-(-max_ctx // page_size))
+        self.alloc = PagedKVAllocator(total_pages, page_size)
+        self._prefill = jax.jit(make_prefill(cfg))
+        self._decode = make_decode(cfg)
+        self._step_fns: Dict[int, object] = {}   # pow2 bsz -> jitted step
+        cache = model_lib.init_cache(cfg, max_slots, max_ctx)
+        self.cache: Dict[str, jax.Array] = dict(cache)
+        # per-row positions; idle rows sit at 1 (a 0 would mask every
+        # position and NaN the softmax — their logits are discarded)
+        self.len_np = np.ones((max_slots,), np.int32)
+        self.cur = np.zeros((max_slots, 1), np.int32)
+        # device mirror of (len, cur): valid between event-free decode
+        # steps so steady-state decoding uploads nothing; any host-side
+        # mutation (admit/finish/preempt) drops it
+        self._dev_state = None
+        self.queue: List[Request] = []
+        self.live: List[Request] = []       # row i <-> live[i]
+        self.stats = ServerStats()
+
+    # --- queue/slot management ------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) + req.max_new_tokens <= self.max_ctx, \
+            "request exceeds the context budget"
+        self.queue.append(req)
+
+    def _write_row(self, row: int, pcache: Dict[str, jax.Array],
+                   bucket: int) -> None:
+        for key in ("k", "v"):
+            v = pcache[key][:, 0]            # (layers, bucket, kv, hd)
+            self.cache[key] = jax.lax.dynamic_update_slice(
+                self.cache[key], v[:, None].astype(self.cache[key].dtype),
+                (0, row, 0, 0, 0))
+        self.len_np[row] = bucket
+        self._dev_state = None
+
+    def _remove_row(self, row: int) -> None:
+        """Swap the last live row into ``row`` (prefix compaction)."""
+        self._dev_state = None
+        last = len(self.live) - 1
+        if row != last:
+            for key in ("k", "v"):
+                self.cache[key] = self.cache[key].at[:, row].set(
+                    self.cache[key][:, last])
+            self.len_np[row] = self.len_np[last]
+            self.cur[row] = self.cur[last]
+            self.live[row] = self.live[last]
+        self.live.pop()
+        self.len_np[last] = 1
+        self.cur[last] = 0
+
+    def _admit(self) -> None:
+        while self.queue and len(self.live) < self.max_slots:
+            req = self.queue[0]
+            plen = len(req.prompt)
+            if not self.alloc.alloc(req.rid, plen):
+                break                        # pages exhausted: wait
+            self.queue.pop(0)
+            # bucket the prompt to a power of 2 (left-pad): bounded
+            # prefill compile shapes
+            bucket = min(_next_pow2(plen), self.max_ctx)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, bucket - plen:] = req.prompt
+            logits, pcache = self._prefill(self.params,
+                                           {"tokens": jnp.asarray(toks)})
+            self.stats.prefill_calls += 1
+            row = len(self.live)
+            self.live.append(req)
+            self._write_row(row, pcache, bucket)
+            first = int(jnp.argmax(logits[0], axis=-1))
+            self.cur[row, 0] = first
+            req.output.append(first)
+            if len(req.output) >= req.max_new_tokens:
+                self._finish(row)
+        self.stats.peak_pages = max(self.stats.peak_pages,
+                                    self.alloc.used_pages)
+
+    def _finish(self, row: int) -> None:
+        req = self.live[row]
+        req.done = True
+        self.alloc.release(req.rid)
+        self.stats.n_finished += 1
+        self._remove_row(row)
+
+    def _preempt_latest(self) -> bool:
+        """Evict the most recently admitted request (recompute on
+        re-admission).  False if there is nothing to evict."""
+        if len(self.live) <= 1:
+            return False
+        row = len(self.live) - 1
+        req = self.live[row]
+        self.alloc.release(req.rid)
+        req.output.clear()
+        self._remove_row(row)
+        self.queue.insert(0, req)
+        self.stats.n_preempted += 1
+        return True
+
+    def _step_fn(self, bsz: int):
+        """One fused program per pow2 batch size: prefix-slice the cache,
+        decode, scatter the new row back, greedy-pick — a single dispatch
+        per decode step instead of slice/decode/update/argmax launches
+        (the unfused chain ate the scheduling win on small models)."""
+        fn = self._step_fns.get(bsz)
+        if fn is None:
+            decode = self._decode
+
+            def f(params, k, v, lens, cur):
+                cache = {"k": k[:, :bsz], "v": v[:, :bsz], "len": lens[:bsz]}
+                logits, new = decode(params, cache, cur[:bsz])
+                k = jax.lax.dynamic_update_slice(
+                    k, new["k"].astype(k.dtype), (0, 0, 0, 0, 0))
+                v = jax.lax.dynamic_update_slice(
+                    v, new["v"].astype(v.dtype), (0, 0, 0, 0, 0))
+                nxt = jnp.argmax(logits, axis=-1)
+                # advance the mirrored prefix too (idle rows in the slice
+                # drift, but their logits are discarded and any admission
+                # resets the mirror from the host arrays)
+                lens = jax.lax.dynamic_update_slice(lens, lens[:bsz] + 1,
+                                                    (0,))
+                cur = jax.lax.dynamic_update_slice(
+                    cur, nxt[:, None].astype(cur.dtype), (0, 0))
+                return k, v, nxt, lens, cur
+            fn = jax.jit(f)
+            self._step_fns[bsz] = fn
+        return fn
+
+    # --- the step -------------------------------------------------------------
+    def step(self) -> bool:
+        """Admissions, then ONE decode step over the live prefix.
+        Returns False when queue and slots are both empty."""
+        self._admit()
+        if not self.live:
+            if self.queue:
+                raise RuntimeError(
+                    "head-of-line request cannot fit the page budget")
+            return False
+        # grow page allocations for the token this step will append
+        row = 0
+        while row < len(self.live):
+            req = self.live[row]
+            if self.alloc.extend(req.rid, int(self.len_np[row]) + 1):
+                row += 1
+                continue
+            if not self._preempt_latest() or row >= len(self.live):
+                row += 1                     # at capacity: decode anyway
+        n_live = len(self.live)
+        bsz = min(_next_pow2(n_live), self.max_slots)
+        if self._dev_state is None:
+            lens_d, cur_d = jnp.asarray(self.len_np), jnp.asarray(self.cur)
+        else:
+            lens_d, cur_d = self._dev_state
+        k, v, nxt, lens_d, cur_d = self._step_fn(bsz)(
+            self.params, self.cache["k"], self.cache["v"], lens_d, cur_d)
+        self.cache["k"], self.cache["v"] = k, v
+        self._dev_state = (lens_d, cur_d)
+        self.stats.decode_steps += 1
+        self.stats.decode_row_steps += bsz
+        nxt = np.asarray(nxt, np.int32)
+        self.len_np[:n_live] += 1
+        done: List[Request] = []
+        for r_i in range(n_live):
+            req = self.live[r_i]
+            req.output.append(int(nxt[r_i]))
+            self.cur[r_i, 0] = nxt[r_i]
+            if len(req.output) >= req.max_new_tokens:
+                done.append(req)
+        for req in done:                     # finish by identity: each
+            self._finish(self.live.index(req))   # _finish swaps rows
+        return bool(self.live or self.queue)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        while self.step():
+            pass
+        return requests

@@ -92,7 +92,15 @@ class Request:
 class BatchedServer:
     """Static-batch server: pads a batch of requests, prefills once, then
     decodes in lockstep until every request finishes (used by
-    examples/serve_batched.py and the serve smoke tests)."""
+    examples/serve_batched.py and the serve smoke tests).
+
+    Finished rows are compacted out: once live requests fall to half the
+    current batch, the cache/batch are gathered down to the live rows, so
+    a batch with mixed ``max_new_tokens`` stops paying full-batch decode
+    steps for dead rows.  Halving bounds recompiles at log2(batch) while
+    capping wasted row-steps at 2x the useful work.  ``decode_steps`` /
+    ``decode_row_steps`` count the actual work for the regression test.
+    """
 
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
                  batch_size: int = 8):
@@ -102,6 +110,8 @@ class BatchedServer:
         self.batch_size = batch_size
         self._prefill = jax.jit(make_prefill(cfg))
         self._decode = jax.jit(make_decode(cfg))
+        self.decode_steps = 0        # decode_step launches
+        self.decode_row_steps = 0    # sum of batch rows over launches
 
     def run(self, requests: List[Request]) -> List[Request]:
         for i in range(0, len(requests), self.batch_size):
@@ -125,18 +135,39 @@ class BatchedServer:
         # re-home the cache into a max_len buffer
         full = model_lib.init_cache(self.cfg, b, self.max_len)
         cache = kv_cache.grow_cache(cache, full)
-        steps = max(r.max_new_tokens for r in reqs)
         cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        for _ in range(steps):
-            for i, r in enumerate(reqs):
+        rows = list(range(b))        # batch row -> index into reqs
+        while True:
+            for j, ri in enumerate(rows):
+                r = reqs[ri]
                 if not r.done:
-                    r.output.append(int(cur[i, 0]))
+                    r.output.append(int(cur[j, 0]))
                     if len(r.output) >= r.max_new_tokens:
                         r.done = True
-            if all(r.done for r in reqs):
+            live = [j for j, ri in enumerate(rows) if not reqs[ri].done]
+            if not live:
                 break
+            if len(live) <= len(rows) // 2:
+                # gather the cache down to the live rows (rows decode
+                # independently, so trajectories are unchanged)
+                nrows = len(rows)
+                idx = jnp.asarray(live)
+
+                def take(v):
+                    if getattr(v, "ndim", 0) == 0:
+                        return v
+                    if v.ndim >= 2 and v.shape[1] == nrows:
+                        return v[:, idx]
+                    if v.shape[0] == nrows:
+                        return v[idx]
+                    return v
+                cache = {k: take(v) for k, v in cache.items()}
+                cur = cur[idx]
+                rows = [rows[j] for j in live]
             logits, cache = self._decode(self.params, cache, cur)
             cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            self.decode_steps += 1
+            self.decode_row_steps += len(rows)
 
 
 

@@ -59,3 +59,190 @@ def test_ssm_decode_long_context_state_size_constant():
         sizes.append(sum(np.asarray(v).nbytes
                          for v in jax.tree_util.tree_leaves(cache)))
     assert len(set(sizes)) == 1
+
+
+def test_batched_server_compacts_dead_rows():
+    """Mixed max_new: the server stops paying full-batch decode for rows
+    that finished (one 24-token straggler + three 3-token shorts)."""
+    cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                              n_layers=2)
+    params = model_lib.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=24 if i == 0 else 3)
+            for i in range(4)]
+    server = BatchedServer(cfg, params, max_len=64, batch_size=4)
+    server.run(reqs)
+    assert all(r.done for r in reqs)
+    # straggler: 1 token from prefill + 23 decode steps; the 3 shorts die
+    # after step 2, then compaction drops to 1 row (2x4 + 21x1 = 29 row
+    # steps vs 92 for lockstep-to-the-end)
+    assert server.decode_steps == 23
+    assert server.decode_row_steps == 29
+
+
+def test_decode_per_row_len_matches_scalar():
+    """(B,) cache lens reproduce the scalar-lockstep logits when all rows
+    sit at the same position (the continuous-batching decode path)."""
+    cfg = dataclasses.replace(get_config("qwen1_5_0_5b").reduced(),
+                              n_layers=2)
+    params = model_lib.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    _, cache = model_lib.forward(cfg, params, {"tokens": toks},
+                                 return_cache=True)
+    from repro.serve import kv_cache
+    full = model_lib.init_cache(cfg, 2, 32)
+    cache = kv_cache.grow_cache(cache, full)
+    cache["len"] = jnp.asarray(8, jnp.int32)
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 1)), jnp.int32)
+    log_scalar, c1 = model_lib.decode(cfg, params, dict(cache), nxt)
+    cache_v = dict(cache)
+    cache_v["len"] = jnp.full((2,), 8, jnp.int32)
+    log_vec, c2 = model_lib.decode(cfg, params, cache_v, nxt)
+    np.testing.assert_allclose(np.asarray(log_scalar), np.asarray(log_vec),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1["k"]), np.asarray(c2["k"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_cache_specs_kv_heads_shard_to_model():
+    from repro.serve.serve_step import cache_specs
+    cfg = get_config("qwen1_5_0_5b").reduced()      # n_kv_heads=2
+    specs = cache_specs(cfg, batch=2, max_len=64,
+                        mesh=_FakeMesh({"model": 2}))
+    # (layers, batch, s, kv, hd): kv_heads divides -> 'model' on dim 3
+    assert tuple(specs["k"]) == (None, None, None, "model", None)
+    assert tuple(specs["v"]) == (None, None, None, "model", None)
+
+
+def test_cache_specs_kv_seq_fallback():
+    from repro.serve.serve_step import cache_specs
+    cfg = get_config("granite_20b").reduced()       # n_kv_heads=1 (MQA)
+    specs = cache_specs(cfg, batch=2, max_len=64,
+                        mesh=_FakeMesh({"model": 2}))
+    # 1 kv head can't shard 2-way -> fall back to the long kv_seq dim
+    assert tuple(specs["k"]) == (None, None, "model", None, None)
+
+
+def test_cache_specs_batch_dim_dp_sharded():
+    from repro.serve.serve_step import cache_specs
+    cfg = get_config("qwen1_5_0_5b").reduced()
+    specs = cache_specs(cfg, batch=4, max_len=64,
+                        mesh=_FakeMesh({"data": 2, "model": 2}))
+    assert tuple(specs["k"]) == (None, "data", None, "model", None)
+    # non-divisible batch stays replicated
+    specs = cache_specs(cfg, batch=3, max_len=64,
+                        mesh=_FakeMesh({"data": 2, "model": 2}))
+    assert tuple(specs["k"])[1] is None
+
+
+def test_grow_cache_ring_and_ssm_passthrough():
+    from repro.serve import kv_cache
+    # SWA ring cache is window-capped: both "sizes" are the same buffer
+    swa = get_config("mixtral_8x22b").reduced()      # window=32
+    small = model_lib.init_cache(swa, 2, 32)
+    full = model_lib.init_cache(swa, 2, 64)
+    assert small["k"].shape == full["k"].shape       # decl caps at window
+    out = kv_cache.grow_cache(small, full)
+    assert out["k"].shape == full["k"].shape
+    np.testing.assert_array_equal(np.asarray(out["k"]),
+                                  np.asarray(small["k"]))
+    # SSM state is context-independent: growth is a pure passthrough
+    ssm = get_config("mamba2_130m").reduced()
+    s_small = model_lib.init_cache(ssm, 2, 8)
+    s_full = model_lib.init_cache(ssm, 2, 512)
+    out = kv_cache.grow_cache(s_small, s_full)
+    assert kv_cache.cache_bytes(out) == kv_cache.cache_bytes(s_small)
+
+
+# --- continuous batching -----------------------------------------------------
+
+
+def _cb_server(cfg, params, **kw):
+    from repro.serve.scheduler import ContinuousBatchingServer
+    return ContinuousBatchingServer(cfg, params, **kw)
+
+
+def test_continuous_batching_matches_teacher_forcing():
+    cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                              n_layers=2)
+    params = model_lib.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=6)
+    _cb_server(cfg, params, max_slots=4, max_ctx=32).run([req])
+    assert req.done and len(req.output) == 6
+    toks = list(prompt)
+    want = []
+    for _ in range(6):
+        logits = model_lib.forward(
+            cfg, params, {"tokens": jnp.asarray([toks], jnp.int32)})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        want.append(nxt)
+        toks.append(nxt)
+    assert req.output == want, (req.output, want)
+
+
+def test_continuous_batching_mid_stream_admission():
+    """More requests than slots: short requests retire and free slots for
+    the queue without waiting for the straggler."""
+    cfg = dataclasses.replace(get_config("qwen1_5_0_5b").reduced(),
+                              n_layers=2)
+    params = model_lib.init(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=24 if i == 0 else 3)
+            for i in range(6)]
+    srv = _cb_server(cfg, params, max_slots=2, max_ctx=64)
+    srv.run(reqs)
+    assert all(r.done for r in reqs)
+    assert [len(r.output) for r in reqs] == [24, 3, 3, 3, 3, 3]
+    assert srv.stats.n_finished == 6 and srv.stats.prefill_calls == 6
+    # the straggler runs concurrently with the shorts: far fewer steps
+    # than serving the 6 requests in lockstep pairs (24+3+3 batches)
+    assert srv.stats.decode_steps < 30
+    assert srv.live == [] and srv.alloc.used_pages == 0
+
+
+def test_continuous_batching_preempts_on_page_exhaustion():
+    cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                              n_layers=2)
+    params = model_lib.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=12) for i in range(2)]
+    # each request grows to 20 tokens = 5 pages; 8 total pages can't hold
+    # two at full length -> the later admission is preempted and retried
+    srv = _cb_server(cfg, params, max_slots=2, max_ctx=32, page_size=4,
+                     total_pages=8)
+    srv.run(reqs)
+    assert all(r.done and len(r.output) == 12 for r in reqs)
+    assert srv.stats.n_preempted >= 1
+    assert srv.alloc.used_pages == 0
+    # preemption must not corrupt the survivor: same outputs as unconstrained
+    redo = [Request(rid=r.rid, prompt=r.prompt, max_new_tokens=12)
+            for r in reqs]
+    _cb_server(cfg, params, max_slots=2, max_ctx=32).run(redo)
+    assert [r.output for r in redo] == [r.output for r in reqs]
+
+
+def test_continuous_batching_rejects_impossible_head_of_line():
+    import pytest
+    cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                              n_layers=2)
+    params = model_lib.init(cfg, jax.random.PRNGKey(0))
+    req = Request(rid=0, prompt=np.arange(16, dtype=np.int32),
+                  max_new_tokens=4)
+    srv = _cb_server(cfg, params, max_slots=2, max_ctx=32, page_size=4,
+                     total_pages=2)     # 8 tokens of budget, 16 needed
+    with pytest.raises(RuntimeError):
+        srv.run([req])
