@@ -1,0 +1,98 @@
+"""Adaptive per-replica microbatching benchmark, with a CI gate.
+
+Measures what the tentpole plan dimension buys on a heterogeneous
+data-parallel mix: on a 2:1 throughput cluster (A100-40 alongside
+V100-16), a uniform microbatch size makes every DP chain march at the
+straggler's pace, while a throughput-proportional
+:class:`~repro.core.planner.plan.BatchAssignment` narrows the chain
+finish-time spread to the apportionment remainder.
+
+Two measurements:
+
+* **planner** — full search with ``adaptive=True`` (the default) vs the
+  same search with the dimension disabled (``adaptive=False``, the
+  pre-refactor behavior).  This is the end-to-end claim: the planner must
+  *find* and adopt the assignment, not just price it.
+* **fixed-layout** — one pinned 2:1 mixed plan vs its
+  ``adaptive_plan`` variant through the event engine.  Layout-invariant,
+  so the speedup isolates the assignment itself from plan-shape changes.
+
+Gate: with ``ADAPTIVE_GATE=1`` (the ``adaptive-bench`` CI job) the run
+fails if the planner speedup falls below ``accuracy_budget.json``'s
+``adaptive_vs_uniform_speedup_min``.
+"""
+import json
+import os
+import pathlib
+
+from repro.configs import get_config
+from repro.core.cluster import heterogeneous_zone
+from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+from repro.core.planner.plan import (ParallelPlan, StageConfig, StageReplica,
+                                     adaptive_plan)
+from repro.core.planner.search import plan_for
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.simulator import timing as tim
+
+from benchmarks.common import emit, timed
+
+BUDGET_PATH = pathlib.Path(__file__).parent / "accuracy_budget.json"
+ZONE = "us-central1-a"
+
+
+def _mixed_plan(profile, gbs, mbs, n_fast=2, n_slow=2):
+    L = profile.n_partition_units
+    reps = tuple(StageReplica("A100-40", 1, ZONE) for _ in range(n_fast)) + \
+        tuple(StageReplica("V100-16", 1, ZONE) for _ in range(n_slow))
+    return ParallelPlan(stages=(StageConfig(0, L, reps),), mbs=mbs,
+                        global_batch=gbs)
+
+
+def run(gate=None):
+    if gate is None:
+        gate = os.environ.get("ADAPTIVE_GATE", "") not in ("", "0")
+    cfg = get_config("opt-350m")
+    cluster = heterogeneous_zone({"A100-40": 16, "V100-16": 16})
+
+    # planner end-to-end: adaptive dimension on vs off
+    res_ad, dt_ad = timed(plan_for, cfg, cluster,
+                          Objective(MAX_THROUGHPUT), 2048, 256)
+    res_uni, dt_uni = timed(plan_for, cfg, cluster,
+                            Objective(MAX_THROUGHPUT), 2048, 256,
+                            adaptive=False)
+    assert res_ad.best is not None and res_uni.best is not None
+    planner_speedup = res_uni.best.t_iter / res_ad.best.t_iter
+    emit("adaptive/planner_uniform", dt_uni,
+         f"t_iter={res_uni.best.t_iter:.4f}s")
+    emit("adaptive/planner_adaptive", dt_ad,
+         f"t_iter={res_ad.best.t_iter:.4f}s "
+         f"adaptive={res_ad.best.plan.assignment is not None}")
+    emit("adaptive/planner_speedup", 0.0, f"{planner_speedup:.3f}x")
+
+    # fixed layout: same chips, only the assignment changes
+    profile = JobProfile(TrainJob(cfg=cfg, seq_len=2048, global_batch=64))
+    plan = _mixed_plan(profile, gbs=64, mbs=2)
+    ap = adaptive_plan(plan, profile.chain_rates(plan))
+    assert ap is not None
+    t_u = tim.iteration_time(profile, plan, cluster).t_iter
+    t_a = tim.iteration_time(profile, ap, cluster).t_iter
+    fixed_speedup = t_u / t_a
+    emit("adaptive/fixed_layout_speedup", 0.0,
+         f"{fixed_speedup:.3f}x ({t_u:.4f}s -> {t_a:.4f}s)")
+
+    if gate:
+        budget = json.loads(BUDGET_PATH.read_text())
+        need = float(budget["adaptive_vs_uniform_speedup_min"])
+        if planner_speedup < need:
+            raise SystemExit(
+                f"ADAPTIVE GATE FAILED: planner adaptive-vs-uniform "
+                f"speedup {planner_speedup:.3f}x < {need}x")
+        if res_ad.best.plan.assignment is None:
+            raise SystemExit(
+                "ADAPTIVE GATE FAILED: planner did not adopt an adaptive "
+                "assignment on the 2:1 mix")
+        print(f"# adaptive gate ok: {planner_speedup:.3f}x >= {need}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -30,6 +30,8 @@ MODULES = [
     ("kern", "benchmarks.kernels_bench"),             # kernel microbench
     ("serving", "benchmarks.serving_bench"),          # serving stack
     #  (SERVING_GATE=1 enforces CB-speedup + planner-vs-naive budgets)
+    ("adaptive", "benchmarks.adaptive_batching"),     # §adaptive microbatch
+    #  (ADAPTIVE_GATE=1 enforces adaptive-vs-uniform speedup budget)
 ]
 
 # modules with an accuracy_budget.json gate and the env var that arms it
@@ -40,6 +42,7 @@ GATES = {
     "chaos": "CHAOS_GATE",
     "kern": "KERNELS_GATE",
     "serving": "SERVING_GATE",
+    "adaptive": "ADAPTIVE_GATE",
 }
 
 REPORT_PATH = os.path.join(

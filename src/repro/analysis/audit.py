@@ -201,6 +201,30 @@ def plan_audit(plan, cluster) -> Report:
         report.add("PlanCapacity", ERROR,
                    "plan uses chips the cluster no longer has",
                    usage=over)
+    if plan.assignment is not None:
+        from repro.core.planner.plan import PlanError
+        try:
+            plan.assignment.validate(plan.global_batch)
+        except PlanError as e:
+            report.add("BatchAssignment", ERROR,
+                       f"adaptive assignment invalid: {e}",
+                       assignment=str(plan.assignment))
+        else:
+            if plan.assignment.dp != plan.dp:
+                report.add("BatchAssignment", ERROR,
+                           f"assignment has {plan.assignment.dp} replicas "
+                           f"but plan dp is {plan.dp}")
+            if plan.assignment.max_mbs > plan.mbs:
+                report.add("BatchAssignment", ERROR,
+                           f"assignment max mbs {plan.assignment.max_mbs} "
+                           f"exceeds nominal mbs {plan.mbs} (memory/TP "
+                           f"gates were sized for the nominal)")
+    if plan.staleness > 0:
+        report.add("BoundedStaleness", WARNING,
+                   f"plan runs bounded-staleness sync (k={plan.staleness}): "
+                   f"gradients may lag up to {plan.staleness} step(s); "
+                   f"convergence must be re-pinned for this job",
+                   staleness=plan.staleness)
     report.summary = {"n_stages": len(plan.stages),
                       "chips": sum(used.values())}
     return report

@@ -508,6 +508,45 @@ class DPSolver:
         return out
 
     # --- decode internal choices to StageChoice ------------------------------------
+    def adaptive_est_time(self, partial: Partial) -> float:
+        """Optimistic iteration time of this candidate under an adaptive
+        per-replica :class:`~repro.core.planner.plan.BatchAssignment`.
+
+        Uniform microbatching makes each stage's steady unit the straggler
+        max over its replica mix; throughput-proportional sizing is work-
+        conserving, so the per-global-microbatch unit drops to the harmonic
+        form ``d / sum_j(n_j / t_j)`` over the stage's replica options.
+        Under the linear-time model the rebalance equalizes every
+        replica's per-micro time at that same unit, so the warmup's
+        per-stage straggler terms are replaced by the stage units too
+        (p2p terms unchanged).  Each unit is clamped at the stage
+        straggler max and the steady at the uniform steady, so the
+        estimate never exceeds ``est_time`` — an admissible rank key for
+        the adaptive variant phase 2 simulates."""
+        if self.d <= 1:
+            return partial.est_time(self.n_micro)
+        steady = 0.0
+        warmup = partial.warmup
+        for i, (_ri, parts) in enumerate(partial.choices):
+            pseudo = self._pseudo[i]
+            inv = 0.0
+            tmax = 0.0
+            for pos, n in parts:
+                t = pseudo[pos][2]
+                if t > tmax:
+                    tmax = t
+                if t > 0.0:
+                    inv += n / t
+            unit = self.d / inv if inv > 0.0 else 0.0
+            if unit > tmax:
+                unit = tmax
+            warmup -= tmax - unit
+            if unit > steady:
+                steady = unit
+        steady = min(steady, partial.steady)
+        n1 = max(self.n_micro - 1, 0)
+        return warmup + n1 * steady + partial.sync
+
     def decode(self, partial: Partial) -> List[StageChoice]:
         out = []
         for i, (ri, parts) in enumerate(partial.choices):

@@ -56,7 +56,8 @@ from repro.core.planner.dp_solver import (CandidateMemo, DPSolver,
                                           StageChoice)
 from repro.core.planner.objectives import (MAX_THROUGHPUT, MIN_COST,
                                            Objective, ServingObjective)
-from repro.core.planner.plan import (ParallelPlan, StageConfig, StageReplica)
+from repro.core.planner.plan import (ParallelPlan, StageConfig, StageReplica,
+                                     adaptive_plan)
 from repro.core.profiler.analytic import JobProfile, TrainJob
 from repro.core.simulator import memory as mem_mod
 from repro.core.simulator.simulate import SimResult, simulate
@@ -128,8 +129,9 @@ def rehome_plan(plan: ParallelPlan,
             if not placed:
                 return None
         stages.append(StageConfig(s.layer_start, s.layer_end, tuple(reps)))
-    return ParallelPlan(stages=tuple(stages), mbs=plan.mbs,
-                        global_batch=plan.global_batch)
+    # replace() keeps every other plan dimension — mbs, global_batch, an
+    # adaptive assignment, the staleness mode — intact through the rehome.
+    return dataclasses.replace(plan, stages=tuple(stages))
 
 
 def _materialize(profile: JobProfile, choices: List[StageChoice],
@@ -202,7 +204,9 @@ class SailorPlanner:
                  share_tables: bool = True, state_beam: int = 512,
                  pool_slack: float = 1.0,
                  audit: Optional[str] = None,
-                 auditor=None):
+                 auditor=None,
+                 adaptive: bool = True,
+                 staleness: int = 0):
         self.job = job
         self.profile = JobProfile(job)
         if engine_cfg is not None:
@@ -246,6 +250,17 @@ class SailorPlanner:
                              f"got {audit!r}")
         self.audit = audit
         self.auditor = auditor
+        # adaptive-vs-uniform and bounded-staleness sync as searched plan
+        # dimensions: phase 1 ranks candidates by the better of the uniform
+        # and adaptive DP estimates; phase 2 simulates the throughput-
+        # proportional BatchAssignment variant of each frontier plan (and,
+        # with staleness > 0, the lagged-sync variant on cross-zone DP
+        # groups) and adopts it only when strictly better.  adaptive=False
+        # + staleness=0 reproduces the uniform-only search exactly.
+        self.adaptive = adaptive
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
+        self.staleness = staleness
         self._tp_sel_cache: Dict = {}
 
     # -------------------------------------------------------------------------
@@ -522,7 +537,13 @@ class SailorPlanner:
                     if part is None:
                         continue    # gap: group best untouched, walk goes on
                     est_t = part.est_time(solver.n_micro)
-                    est_c = part.est_cost(solver.n_micro)
+                    if self.adaptive and d > 1:
+                        # rank by the better of the uniform and adaptive
+                        # estimates: a heterogeneous mix whose straggler
+                        # max looks slow may win once phase 2 rebalances
+                        # its per-replica microbatches
+                        est_t = min(est_t, solver.adaptive_est_time(part))
+                    est_c = part.rate * est_t
                     seq += 1
                     frontier.append(_Candidate(
                         seq=seq, key3=key3, est_time=est_t, est_cost=est_c,
@@ -590,6 +611,27 @@ class SailorPlanner:
             stats["scores"][cand.key3] = objective.score(res)
             if objective.satisfies(res) and objective.better(best, res):
                 best = res
+            for vplan in self._plan_variants(plan):
+                vres = simulate(self.profile, vplan, cluster, self.mem_cfg,
+                                self.engine_cfg)
+                n_eval += 1
+                stats["variants_simulated"] = \
+                    stats.get("variants_simulated", 0) + 1
+                if not vres.valid:
+                    continue
+                # the stored score ranks this candidate on warm replans:
+                # it must reflect the best variant-included quality, or a
+                # candidate that only wins via its adaptive variant would
+                # rank (and get cut) by its weaker uniform score on the
+                # warm path while the fresh path keeps it — diverging
+                # fresh/warm top-K sets.
+                vsc = objective.score(vres)
+                if vsc < stats["scores"][cand.key3]:
+                    stats["scores"][cand.key3] = vsc
+                if objective.satisfies(vres) \
+                        and objective.better(best, vres):
+                    best = vres
+                    stats["variant_adopted"] = vplan.describe()
         for k, v in self.memo.stats.items():
             stats[f"shared_{k}"] = v - memo0.get(k, 0)
         return PlanResult(
@@ -597,6 +639,29 @@ class SailorPlanner:
             search_time_s=time.perf_counter() - t0,
             n_candidates=n_cand, n_evaluated=n_eval, n_oom=n_oom,
             stats=stats)
+
+    def _plan_variants(self, plan: ParallelPlan) -> List[ParallelPlan]:
+        """Adaptive-assignment / bounded-staleness variants of one phase-2
+        plan — the extra searched dimensions.  Variants are only *proposed*
+        here; phase 2 simulates each and adopts it solely when strictly
+        better under the objective, so uniform plans can never lose."""
+        out: List[ParallelPlan] = []
+        bases = [plan]
+        if self.adaptive and plan.assignment is None and plan.dp > 1 \
+                and len({s.dp for s in plan.stages}) == 1:
+            rates = self.profile.chain_rates(plan)
+            lo = min(rates)
+            if lo > 0.0 and max(rates) > lo * 1.01:
+                ap = adaptive_plan(plan, rates)
+                if ap is not None:
+                    out.append(ap)
+                    bases.append(ap)
+        if self.staleness > 0 and plan.staleness == 0:
+            # lagged sync only pays where the DP all-reduce crosses zones
+            if any(s.dp > 1 and len(s.zones()) > 1 for s in plan.stages):
+                out.extend(dataclasses.replace(p, staleness=self.staleness)
+                           for p in bases)
+        return out
 
     # -------------------------------------------------------------------------
     @staticmethod

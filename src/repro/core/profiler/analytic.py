@@ -454,6 +454,28 @@ class JobProfile:
     def boundary_bytes(self, mbs: int) -> int:
         return mbs * self.job.seq_len * self.cfg.d_model * DTYPE_BYTES
 
+    def replica_rate(self, layer_lo: int, layer_hi: int, gpu_type: str,
+                     tp: int, mbs: int) -> float:
+        """Steady samples/s of one stage replica at ``mbs``: the rate the
+        adaptive-microbatching apportionment balances against."""
+        fwd, bwd, _ = self.stage_cost(layer_lo, layer_hi, gpu_type, tp, mbs)
+        t = fwd + bwd
+        return mbs / t if t > 0.0 else 0.0
+
+    def chain_rates(self, plan) -> List[float]:
+        """Per-DP-chain steady throughput (samples/s) at the plan's nominal
+        mbs — the bottleneck stage replica of each chain.  Only meaningful
+        for uniform per-stage dp (chain ``d`` = replica ``d`` of every
+        stage), which is what adaptive plans require."""
+        rates: List[float] = []
+        for d in range(plan.dp):
+            r = min(self.replica_rate(s.layer_start, s.layer_end,
+                                      s.replicas[d].gpu_type,
+                                      s.replicas[d].tp, plan.mbs)
+                    for s in plan.stages)
+            rates.append(r)
+        return rates
+
     @property
     def n_partition_units(self) -> int:
         return len(self.layer_kinds())

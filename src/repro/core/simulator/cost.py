@@ -30,11 +30,11 @@ def comm_cost(profile: JobProfile, plan: ParallelPlan,
     from repro.core.simulator.timing import boundary_route
 
     cost = 0.0
-    n_micro = plan.num_microbatches
-    act = profile.boundary_bytes(plan.mbs)
     # pipeline p2p across zones: fwd activation + bwd gradient per
     # microbatch, following the explicit sender->receiver routing (stages
-    # may have unequal replica counts)
+    # may have unequal replica counts).  Under an adaptive assignment each
+    # chain ships its OWN microbatch size/count; uniform plans reduce to
+    # the plan-nominal values on every chain.
     for i in range(plan.pp - 1):
         for d in range(plan.stages[i].dp):
             z_a = plan.stages[i].replicas[d].zone
@@ -42,7 +42,8 @@ def comm_cost(profile: JobProfile, plan: ParallelPlan,
             z_b = plan.stages[i + 1].replicas[recv].zone
             price = cluster.egress_price(z_a, z_b)
             if price > 0:
-                cost += 2 * act * n_micro * price
+                act = profile.boundary_bytes(plan.replica_mbs(d))
+                cost += 2 * act * plan.replica_n_micro(d) * price
     # DP sync rings crossing zones: 2 x per-shard payload per boundary
     # crossing (hierarchical sync sends each replica's own shard, not the
     # largest shard over every link)

@@ -72,6 +72,12 @@ class EngineConfig:
     record_timeline: bool = False     # keep tagged (tag, start, end) events
     #                                   in PipelineResult.timeline — the
     #                                   telemetry layer's sample source
+    sync_lag: int = 0                 # bounded-staleness DP sync: updates
+    #                                   may apply gradients lagging <= k
+    #                                   steps, so the all-reduce tail drops
+    #                                   off the iteration critical path
+    #                                   (0 = fully synchronous, the default
+    #                                   path is untouched)
 
     def exact_cap(self, n_stages: int) -> int:
         if self.max_exact_microbatches > 0:
@@ -462,12 +468,22 @@ def run_1f1b(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
             continue
         t = sim.place(sim.task(spec.cost[(s, r)].upd + ov, tag=("U", s, r)),
                       worker[(s, r)])
-        if s in ar:
+        if s in ar and cfg.sync_lag == 0:
+            # synchronous: the update waits for this stage's gradient sync.
+            # Under bounded staleness (sync_lag > 0) it applies a gradient
+            # from <= k steps ago instead, so the AR tail is decoupled.
             t.deps.append(ar[s][-1])
         upd_tasks[(s, r)] = t
 
     _chain_fifo_deps(sim)
     t_total = sim.run()
+    if cfg.sync_lag > 0:
+        # compute-only makespan: the sync tail runs concurrently with the
+        # next iteration's compute; timing.iteration_time re-adds whatever
+        # stall the k-step lag window cannot hide.
+        t_total = max((t.end for t in sim._tasks
+                       if not (t.tag and t.tag[0] == "AR")),
+                      default=t_total)
 
     bwd_end = [max((bwd[(s, local[(s, r)][-1])].end
                     for r in range(spec.n_replicas[s]) if local[(s, r)]),
@@ -630,7 +646,7 @@ def run_interleaved(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
             t = sim.task(spec.cost[(s, r)].upd + ov, prio=(2, total, s),
                          tag=("U", s, r))
             t.deps.extend(bwd[(l, ms[-1], r)] for l in range(L) if l % P == s)
-            if s in ar:
+            if s in ar and cfg.sync_lag == 0:
                 t.deps.append(ar[s][-1])
             sim.place(t, sim.resource(("w", s, r), fifo=False))
             upd.append(t)
@@ -638,6 +654,10 @@ def run_interleaved(spec: PipelineSpec, cfg: EngineConfig) -> PipelineResult:
     if static:
         _chain_fifo_deps(sim)
     t_total = sim.run()
+    if cfg.sync_lag > 0:
+        t_total = max((t.end for t in sim._tasks
+                       if not (t.tag and t.tag[0] == "AR")),
+                      default=t_total)
     bwd_end = []
     for s in range(P):
         ends = [bwd[(l, ms[-1], r)].end for r, ms in local.items() if ms

@@ -154,14 +154,32 @@ def stage_peak_bytes(profile: JobProfile, layer_lo: int, layer_hi: int,
 
 def worker_peak_bytes(profile: JobProfile, plan: ParallelPlan,
                       stage_idx: int, tp: int,
-                      mem_cfg: MemoryModelConfig = DEFAULT_MEM) -> float:
-    """Peak bytes for ONE worker (one TP shard of one replica) of a stage."""
+                      mem_cfg: MemoryModelConfig = DEFAULT_MEM,
+                      replica_idx: Optional[int] = None) -> float:
+    """Peak bytes for ONE worker (one TP shard of one replica) of a stage.
+
+    ``replica_idx`` selects that replica's OWN microbatch size/count under
+    an adaptive :class:`~repro.core.planner.plan.BatchAssignment`; ``None``
+    keeps the plan-nominal (largest) size — the conservative bound, and
+    byte-identical for uniform plans either way."""
     stage = plan.stages[stage_idx]
+    if replica_idx is None:
+        mbs, n_micro = plan.mbs, plan.num_microbatches
+    else:
+        mbs = plan.replica_mbs(replica_idx)
+        n_micro = plan.replica_n_micro(replica_idx)
     in_flight = in_flight_microbatches(
         plan.pp, stage_idx, mem_cfg.schedule, mem_cfg.virtual_stages,
-        num_micro=max(plan.num_microbatches, 1))
-    return stage_peak_bytes(profile, stage.layer_start, stage.layer_end,
-                            plan.mbs, tp, in_flight, mem_cfg)
+        num_micro=max(n_micro, 1))
+    peak = stage_peak_bytes(profile, stage.layer_start, stage.layer_end,
+                            mbs, tp, in_flight, mem_cfg)
+    if plan.staleness > 0:
+        # bounded-staleness sync buffers one extra combined-gradient shard
+        # per lag slot while the delayed all-reduce drains
+        peak += plan.staleness \
+            * profile.stage_params(stage.layer_start, stage.layer_end) \
+            / tp * mem_cfg.grad_bytes * mem_cfg.fragmentation
+    return peak
 
 
 def plan_memory(profile: JobProfile, plan: ParallelPlan,
@@ -169,12 +187,14 @@ def plan_memory(profile: JobProfile, plan: ParallelPlan,
                 ) -> List[List[Dict]]:
     """Per stage, per replica:
     {'gpu_type','tp','peak','capacity','usable','ok'} — ``ok`` gates on
-    usable HBM (capacity minus the runtime's reserved fraction)."""
+    usable HBM (capacity minus the runtime's reserved fraction).  Adaptive
+    plans are gated per replica at that replica's own microbatch size."""
     out: List[List[Dict]] = []
     for i, stage in enumerate(plan.stages):
         row = []
-        for rep in stage.replicas:
-            peak = worker_peak_bytes(profile, plan, i, rep.tp, mem_cfg)
+        for d, rep in enumerate(stage.replicas):
+            peak = worker_peak_bytes(profile, plan, i, rep.tp, mem_cfg,
+                                     replica_idx=d)
             acc = get_accelerator(rep.gpu_type)
             row.append({"gpu_type": rep.gpu_type, "tp": rep.tp,
                         "peak": peak, "capacity": acc.mem_bytes,

@@ -22,6 +22,7 @@ with unequal DP degrees fan in/out instead of indexing out of range.
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 from typing import Dict, List, Optional, Tuple
@@ -48,11 +49,18 @@ class TimingBreakdown:
 
 
 def _stage_time(profile: JobProfile, plan: ParallelPlan, stage_idx: int,
-                replica_idx: int) -> Dict[str, float]:
+                replica_idx: int,
+                mbs: Optional[int] = None) -> Dict[str, float]:
+    """Per-microbatch cost of one stage replica — at that replica chain's
+    OWN microbatch size under an adaptive assignment (``mbs=None`` resolves
+    it via ``plan.replica_mbs``, which is the plan-nominal size for uniform
+    plans, keeping them byte-identical)."""
     st = plan.stages[stage_idx]
     rep = st.replicas[replica_idx]
+    if mbs is None:
+        mbs = plan.replica_mbs(replica_idx)
     fwd, bwd, upd = profile.stage_cost(
-        st.layer_start, st.layer_end, rep.gpu_type, rep.tp, plan.mbs)
+        st.layer_start, st.layer_end, rep.gpu_type, rep.tp, mbs)
     return {"fwd": fwd, "bwd": bwd, "update": upd}
 
 
@@ -72,15 +80,19 @@ def boundary_route(plan: ParallelPlan, stage_idx: int,
 
 
 def _p2p_time(profile: JobProfile, plan: ParallelPlan, cluster: ClusterSpec,
-              stage_idx: int, replica_idx: int) -> float:
-    """Activation transfer stage i -> i+1 for one microbatch."""
+              stage_idx: int, replica_idx: int,
+              mbs: Optional[int] = None) -> float:
+    """Activation transfer stage i -> i+1 for one microbatch (sized at the
+    sending chain's own mbs under an adaptive assignment)."""
     if stage_idx >= plan.pp - 1:
         return 0.0
     z_a = plan.stages[stage_idx].replicas[replica_idx].zone
     recv = boundary_route(plan, stage_idx, replica_idx)
     z_b = plan.stages[stage_idx + 1].replicas[recv].zone
     link = cluster.link_between(z_a, z_b)
-    return network.p2p_time(link, profile.boundary_bytes(plan.mbs))
+    if mbs is None:
+        mbs = plan.replica_mbs(replica_idx)
+    return network.p2p_time(link, profile.boundary_bytes(mbs))
 
 
 def _chain_replicas(plan: ParallelPlan, start_idx: int) -> List[int]:
@@ -159,8 +171,9 @@ def sync_time(profile: JobProfile, plan: ParallelPlan,
 
 def pipeline_time(profile: JobProfile, plan: ParallelPlan,
                   cluster: ClusterSpec, replica_idx: int) -> Dict:
-    """Closed-form 1F1B time of one DP replica chain."""
-    n_micro = plan.num_microbatches
+    """Closed-form 1F1B time of one DP replica chain (at that chain's own
+    microbatch size/count under an adaptive assignment)."""
+    n_micro = plan.replica_n_micro(replica_idx)
     chain = _chain_replicas(plan, replica_idx)
     per_stage = []
     p2ps = []
@@ -256,6 +269,84 @@ def _engine_spec_uniform(profile: JobProfile, plan: ParallelPlan,
     return spec, reps, M, m_eff
 
 
+def _engine_spec_adaptive(profile: JobProfile, plan: ParallelPlan,
+                          cluster: ClusterSpec, cfg: eng.EngineConfig
+                          ) -> Tuple[eng.PipelineSpec, List[int],
+                                     List[int], List[int]]:
+    """PipelineSpec for adaptive (uniform-dp) plans.
+
+    Chains deduplicate by (hardware chain, mbs, n_micro) class; every
+    worker of a class runs fwd/bwd at that class's OWN microbatch size and
+    the class contributes its own microbatch count to the global stream —
+    the existing ``assign(stage, m)`` routing handles the resulting uneven
+    per-replica counts natively.  Returns (spec, representative chain per
+    class, full per-class counts, exactly-simulated per-class counts)."""
+    P = plan.pp
+    classes: Dict[Tuple, int] = {}
+    reps: List[int] = []          # original chain index per class
+    for d in range(plan.dp):
+        chain = _chain_replicas(plan, d)
+        key = (tuple(plan.stages[s].replicas[chain[s]] for s in range(P)),
+               plan.replica_mbs(d), plan.replica_n_micro(d))
+        if key not in classes:
+            classes[key] = len(reps)
+            reps.append(d)
+    chain_of = [_chain_replicas(plan, d) for d in reps]
+    cap = cfg.exact_cap(P)
+    Ms = [max(plan.replica_n_micro(d), 1) for d in reps]
+    m_effs = [min(m, cap) for m in Ms]
+    offsets = [0]
+    for me in m_effs:
+        offsets.append(offsets[-1] + me)
+
+    cost = {}
+    bytes_of = []
+    for c, d in enumerate(reps):
+        b = plan.replica_mbs(d)
+        bytes_of.append(profile.boundary_bytes(b))
+        for s in range(P):
+            t = _stage_time(profile, plan, s, chain_of[c][s], mbs=b)
+            cost[(s, c)] = eng.WorkerCost(t["fwd"], t["bwd"], t["update"])
+
+    def p2p(sa: int, sb: int, ra: int, rb: int) -> float:
+        z_a = plan.stages[sa].replicas[chain_of[ra][sa]].zone
+        z_b = plan.stages[sb].replicas[chain_of[rb][sb]].zone
+        return network.p2p_time(cluster.link_between(z_a, z_b),
+                                bytes_of[ra])
+
+    n_buckets = max(1, cfg.dp_buckets) if cfg.overlap_comm else 1
+    sync = [_stage_sync_times(profile, plan, cluster, s, n_buckets,
+                              cfg.bucket_bytes if cfg.overlap_comm else 0.0)
+            for s in range(P)]
+    spec = eng.PipelineSpec(
+        n_stages=P, n_replicas=(len(reps),) * P, cost=cost,
+        total_micro=offsets[-1],
+        assign=lambda s, m: bisect.bisect_right(offsets, m) - 1,
+        p2p=p2p, sync=sync)
+    return spec, reps, Ms, m_effs
+
+
+def _class_period(spec: eng.PipelineSpec, cfg: eng.EngineConfig,
+                  c: int) -> float:
+    """Steady cycle time of ONE chain class: its bottleneck stage's busy
+    time per microbatch (plus its own link channels under overlap) — the
+    per-class analogue of ``engine._steady_period`` used to extend the
+    exact window by that class's remainder microbatches."""
+    ov = cfg.per_task_overhead_s
+    period = 0.0
+    for s in range(spec.n_stages):
+        busy = (spec.cost[(s, c)].fwd + spec.cost[(s, c)].bwd + 2 * ov
+                + eng._worker_recv(spec, cfg, s, c))
+        if busy > period:
+            period = busy
+    if cfg.overlap_comm:
+        for s in range(spec.n_stages - 1):
+            t = spec.p2p(s, s + 1, c, c) + ov
+            if t > period:
+                period = t
+    return period
+
+
 def _engine_spec_uneven(profile: JobProfile, plan: ParallelPlan,
                         cluster: ClusterSpec, cfg: eng.EngineConfig
                         ) -> Tuple[eng.PipelineSpec, int, int]:
@@ -322,9 +413,22 @@ def iteration_time(profile: JobProfile, plan: ParallelPlan,
                    ) -> TimingBreakdown:
     """Event-driven iteration time; same facade the closed form exposed."""
     cfg = engine_cfg or eng.DEFAULT_ENGINE
+    if plan.staleness > 0 and cfg.sync_lag != plan.staleness:
+        # bounded-staleness plans run the engine in lagged-sync mode: the
+        # AR tail leaves the critical path and is re-charged below as the
+        # stall the k-step window cannot hide
+        cfg = dataclasses.replace(cfg, sync_lag=plan.staleness)
     P = plan.pp
     uniform = len({st.dp for st in plan.stages}) == 1
-    if uniform:
+    adaptive = plan.assignment is not None
+    if adaptive:
+        spec, reps, Ms, m_effs = _engine_spec_adaptive(
+            profile, plan, cluster, cfg)
+        res = eng.run_pipeline(spec, cfg)
+        shift = max((((Ms[c] - m_effs[c]) * _class_period(spec, cfg, c))
+                     for c in range(len(reps)) if Ms[c] > m_effs[c]),
+                    default=0.0)
+    elif uniform:
         spec, reps, M, m_eff = _engine_spec_uniform(
             profile, plan, cluster, cfg)
         res = eng.run_pipeline(spec, cfg)
@@ -341,6 +445,13 @@ def iteration_time(profile: JobProfile, plan: ParallelPlan,
     t_pp = res.t_pp + shift
     t_sync = max((max(0.0, res.sync_end[s] - res.bwd_end[s])
                   for s in range(P)), default=0.0)
+    if plan.staleness > 0:
+        # t_iter is the compute-only makespan (the engine decoupled the AR
+        # tail); the tail may hide under up to k subsequent iterations of
+        # compute — only the excess stalls the pipeline.
+        stall = max(0.0, t_sync - plan.staleness * t_iter)
+        t_iter += stall
+        t_sync = stall
     t_update = max(c.upd for c in spec.cost.values())
 
     # straggler: worker class with the largest steady-state busy time
@@ -349,7 +460,7 @@ def iteration_time(profile: JobProfile, plan: ParallelPlan,
                   for s in range(P)]
     straggler_stage = max(range(P), key=lambda s: stage_busy[s])
     # chain whose last backward lands latest (uniform: map class -> replica)
-    if uniform:
+    if uniform or adaptive:
         cls_end = [max((res.busy_per_micro.get((s, c), 0.0)
                         for s in range(P)))
                    for c in range(spec.n_replicas[0])]

@@ -415,22 +415,33 @@ class MPMDPipeline:
                     self.params[0], ctx["inputs"][0], gx)
         return loss, grads
 
-    def train_step(self, batch: Dict[str, Any]) -> float:
-        """One optimizer step over a (num_micro, batch, seq) token batch.
+    def grad_step(self, batch: Dict[str, Any],
+                  weights: Optional[Sequence[float]] = None):
+        """Forward/backward over a (num_micro, batch, seq) token batch
+        WITHOUT applying the optimizer update.
 
-        Returns the mean over microbatches of the per-microbatch masked
-        mean loss, at the pre-update parameters — the same normalization
-        as the single-program ``train_step.loss_and_grads`` (and equal to
-        the flat-batch loss when valid-token counts are even across
-        microbatches, e.g. whenever no label is IGNORE_LABEL).
+        Returns ``(loss, grads)`` with ``grads`` the per-stage combined
+        gradient trees.  ``weights=None`` averages microbatches uniformly
+        (``g = (1/M) sum_m g_m`` — the classic path, unchanged).  With
+        ``weights`` given, microbatch ``m`` contributes ``weights[m] *
+        g_m`` and the loss is the same weighted sum — the unbiased
+        adaptive-microbatching combine where microbatch ``m`` of ``b_m``
+        samples carries ``w_m = b_m / B``.  Weights may sum to less than 1
+        when a DP group (:class:`AdaptiveDPGroup`) normalizes across its
+        replicas; loss normalization is then completed by the group sum.
         """
         if self.params is None:
             raise RuntimeError("load parameters first (full_params_like / "
                                "init_params)")
-        t_start = time.perf_counter()
         tokens, labels = batch["tokens"], batch["labels"]
         num_micro = tokens.shape[0]
         n = len(self.stages)
+        w = None
+        if weights is not None:
+            w = np.asarray(weights, dtype=np.float32)
+            if w.shape != (num_micro,):
+                raise ValueError(f"weights shape {w.shape} does not match "
+                                 f"{num_micro} microbatches")
         acc: List[Any] = [None] * n
         losses: List[Any] = []
 
@@ -447,17 +458,51 @@ class MPMDPipeline:
                 mb, ctx = pending.popleft()
                 loss, grads = self._backward_micro(ctx, labels[mb])
                 losses.append(loss)      # device scalar; no sync here
+                if w is not None:
+                    wm = float(w[mb])
+                    grads = [jax.tree_util.tree_map(
+                        lambda a, _w=wm: a * _w, g) for g in grads]
                 for i in range(n):
                     acc[i] = grads[i] if acc[i] is None else \
                         jax.tree_util.tree_map(jnp.add, acc[i], grads[i])
 
-        inv = 1.0 / num_micro
-        for i in range(n):
-            g = jax.tree_util.tree_map(lambda a: a * inv, acc[i])
+        if w is None:
+            inv = 1.0 / num_micro
+            out_grads = [jax.tree_util.tree_map(lambda a: a * inv, acc[i])
+                         for i in range(n)]
+            loss = float(np.sum(jax.device_get(losses)) * inv)
+        else:
+            out_grads = acc              # already weighted at add time
+            loss = float(np.sum(np.asarray(jax.device_get(losses),
+                                           dtype=np.float64)
+                                * w.astype(np.float64)))
+        return loss, out_grads
+
+    def apply_grads(self, grads: Sequence[Any]) -> None:
+        """Apply per-stage gradient trees through the stage optimizers —
+        the update half of :meth:`train_step`.  ``AdaptiveDPGroup`` routes
+        DP-combined (possibly staleness-delayed) gradients through here."""
+        for i in range(len(self.stages)):
             self.params[i], self.opt_states[i], _ = \
                 self._programs[i]["update"](self.params[i],
-                                            self.opt_states[i], g)
-        out = float(np.sum(jax.device_get(losses)) * inv)
+                                            self.opt_states[i], grads[i])
+
+    def train_step(self, batch: Dict[str, Any],
+                   weights: Optional[Sequence[float]] = None) -> float:
+        """One optimizer step over a (num_micro, batch, seq) token batch.
+
+        Returns the mean over microbatches of the per-microbatch masked
+        mean loss, at the pre-update parameters — the same normalization
+        as the single-program ``train_step.loss_and_grads`` (and equal to
+        the flat-batch loss when valid-token counts are even across
+        microbatches, e.g. whenever no label is IGNORE_LABEL).  With
+        ``weights``, gradient accumulation and the loss use the given
+        per-microbatch weights instead (see :meth:`grad_step`).
+        """
+        t_start = time.perf_counter()
+        out, grads = self.grad_step(batch, weights)
+        n = len(self.stages)
+        self.apply_grads(grads)
         if self._telemetry is not None:
             from repro.telemetry.bus import wall_clock
             for i in range(n):
@@ -472,3 +517,114 @@ class MPMDPipeline:
             self._telemetry.end_step(self._tel_step, wall_clock())
             self._tel_step += 1
         return out
+
+
+class AdaptiveDPGroup:
+    """Data-parallel group of :class:`MPMDPipeline` replicas under an
+    adaptive per-replica batch assignment.
+
+    Replica ``r`` runs its OWN microbatch stack (``n_r`` microbatches of
+    ``b_r`` sequences); gradients combine host-side with the unbiased
+    weights ``w_r = b_r * n_r / B`` — inside a replica each microbatch
+    carries ``w_r / n_r = b_r / B``, so the group total equals the
+    full-batch mean gradient exactly (up to float association), which is
+    why adaptive batching is convergence-neutral.
+
+    ``staleness=k`` opts into bounded-staleness sync: the combined
+    gradient of step ``t`` is applied at step ``t + k`` (the first ``k``
+    steps apply nothing), letting a high-latency DP edge overlap its
+    all-reduce with ``k`` iterations of compute.  ``k=0`` applies the
+    current combined gradient immediately — the synchronous path.
+    """
+
+    def __init__(self, replicas: Sequence[MPMDPipeline],
+                 weights: Optional[Sequence[float]] = None,
+                 staleness: int = 0):
+        if not replicas:
+            raise ValueError("empty DP group")
+        self.replicas = list(replicas)
+        r = len(self.replicas)
+        self.weights = [1.0 / r] * r if weights is None \
+            else [float(x) for x in weights]
+        if len(self.weights) != r:
+            raise ValueError(f"{len(self.weights)} weights for {r} replicas")
+        if staleness < 0:
+            raise ValueError(f"staleness={staleness} (must be >= 0)")
+        self.staleness = int(staleness)
+        self._pending: collections.deque = collections.deque()
+
+    @classmethod
+    def from_assignment(cls, replicas: Sequence[MPMDPipeline], assignment,
+                        staleness: int = 0) -> "AdaptiveDPGroup":
+        """Group with weights from a planner
+        :class:`~repro.core.planner.plan.BatchAssignment`."""
+        return cls(replicas, weights=list(assignment.weights()),
+                   staleness=staleness)
+
+    def train_step(self, batches: Sequence[Dict[str, Any]]) -> float:
+        """One DP step: per-replica weighted grad accumulation over each
+        replica's own (n_r, b_r, seq) stack, host-side weighted combine,
+        delayed apply under bounded staleness.  Returns the group loss
+        (the ``w_r``-weighted mean microbatch loss — the full-batch masked
+        mean when valid-token counts are even)."""
+        if len(batches) != len(self.replicas):
+            raise ValueError(f"{len(batches)} batches for "
+                             f"{len(self.replicas)} replicas")
+        loss = 0.0
+        grads_per_rep: List[Sequence[Any]] = []
+        for r, (rep, batch) in enumerate(zip(self.replicas, batches)):
+            n_micro = batch["tokens"].shape[0]
+            w_micro = [self.weights[r] / n_micro] * n_micro
+            l_r, g_r = rep.grad_step(batch, weights=w_micro)
+            loss += l_r
+            grads_per_rep.append(g_r)
+        self._pending.append(self._combine(grads_per_rep))
+        if len(self._pending) > self.staleness:
+            self._apply(self._pending.popleft())
+        return loss
+
+    def flush(self) -> int:
+        """Apply every still-buffered combined gradient (end-of-training
+        drain under ``staleness > 0``).  Returns how many were applied."""
+        n = 0
+        while self._pending:
+            self._apply(self._pending.popleft())
+            n += 1
+        return n
+
+    def _combine(self, grads_per_rep: Sequence[Sequence[Any]]) -> List[Any]:
+        """Host-side sum of the replicas' already-weighted per-stage
+        gradient trees (every replica holds a full model copy, so the
+        stage pytrees are congruent)."""
+        n_stages = len(grads_per_rep[0])
+        out: List[Any] = []
+        for i in range(n_stages):
+            acc = jax.device_get(grads_per_rep[0][i])
+            for g_r in grads_per_rep[1:]:
+                acc = jax.tree_util.tree_map(np.add, acc,
+                                             jax.device_get(g_r[i]))
+            out.append(acc)
+        return out
+
+    def _apply(self, combined: List[Any]) -> None:
+        for rep in self.replicas:
+            rep.apply_grads(combined)
+
+
+def shard_batch_by_assignment(batch: Dict[str, Any], assignment
+                              ) -> List[Dict[str, Any]]:
+    """Split a flat (B, seq) batch into per-replica (n_r, b_r, seq)
+    microbatch stacks following a
+    :class:`~repro.core.planner.plan.BatchAssignment` (contiguous split;
+    exact conservation guarantees the slices tile the batch)."""
+    out: List[Dict[str, Any]] = []
+    off = 0
+    for rb in assignment.replicas:
+        take = rb.samples
+        rep_batch = {}
+        for k, v in batch.items():
+            sl = v[off:off + take]
+            rep_batch[k] = sl.reshape((rb.n_micro, rb.mbs) + sl.shape[1:])
+        out.append(rep_batch)
+        off += take
+    return out

@@ -31,16 +31,18 @@ import numpy as np
 
 from repro.core.cluster import ClusterSpec
 from repro.core.planner.objectives import Objective
-from repro.core.planner.plan import ParallelPlan
+from repro.core.planner.plan import ParallelPlan, adaptive_plan
 from repro.core.planner.search import PlanResult, plan_fits
 from repro.core.profiler.analytic import DTYPE_BYTES
+from repro.core.simulator.simulate import simulate
 from repro.manager.events import (CapacityDown, CapacityUp, ClusterEvent,
                                   LinkDegraded, NodeFailure, PriceChange,
                                   Straggler)
 from repro.manager.monitor import AvailabilityMonitor
 from repro.manager.replan import IncrementalReplanner
-from repro.manager.transition import (DEFER, RESHARD, ROLLBACK, ROUTE_AROUND,
-                                      TransitionDecision, TransitionModel)
+from repro.manager.transition import (DEFER, REBALANCE, RESHARD, ROLLBACK,
+                                      ROUTE_AROUND, TransitionDecision,
+                                      TransitionModel)
 from repro.train.elastic import ElasticTrainer, RuntimePlan
 
 
@@ -159,11 +161,16 @@ class Controller:
             verdict = self.rca.classify(ev)
             cluster = self.monitor.current
             res = self.replanner.replan(cluster)
+            t_rb, vplan = self._rebalance_option(cluster, verdict)
             dec = self._decide(
                 cluster, mandatory=False, state_lost=False,
                 t_new=res.best.t_iter if res.best else None,
-                root_cause=verdict.kind, res=res)
-            if dec.kind in (RESHARD, ROUTE_AROUND):
+                root_cause=verdict.kind, res=res, t_rebalance=t_rb)
+            if dec.kind == REBALANCE:
+                self._commit_rebalance(ev, vplan, dec,
+                                       root_cause=verdict.kind,
+                                       remediation=verdict.remediation)
+            elif dec.kind in (RESHARD, ROUTE_AROUND):
                 self._commit(ev, cluster, self._n_devices(cluster), res,
                              dec, root_cause=verdict.kind)
             else:
@@ -222,12 +229,86 @@ class Controller:
         res.stats["audit"] = report.to_dict()
         return not report.ok
 
+    def _rebalance_option(self, cluster: ClusterSpec, verdict=None):
+        """``(t_iter_rebalance_s, plan)`` for keeping the committed layout
+        and re-proportioning per-replica microbatches — the cheap
+        remediation the transition model prices below a full reshard —
+        or ``(None, None)`` when no such option exists.
+
+        With a ``slow-chip`` verdict the profile rates of every DP chain
+        touching the degraded ``(zone, acc_type)`` pool are derated by the
+        verdict factor before proportioning, and the projected time is the
+        rebalanced degraded closed form scaled into the committed plan's
+        (nominal) time units so ``decide`` compares like with like.
+        Without a verdict (straggler path) the option is the nominal-rate
+        adaptive variant, priced by the simulator — it only surfaces when
+        the committed plan left static heterogeneity on the table."""
+        best = self._committed.best if self._committed else None
+        if best is None:
+            return None, None
+        plan = best.plan
+        base = dataclasses.replace(plan, assignment=None) \
+            if plan.assignment is not None else plan
+        if base.dp < 2 or len({s.dp for s in base.stages}) != 1:
+            return None, None
+        planner = self.replanner.planner
+        rates = planner.profile.chain_rates(base)
+        if min(rates) <= 0.0:
+            return None, None
+        if verdict is not None:
+            if verdict.kind != "slow-chip" or len(verdict.target) < 2 \
+                    or not (verdict.factor > 1.0):
+                return None, None
+            zone, acc = verdict.target[0], verdict.target[1]
+            derate = 1.0 / verdict.factor
+            deg = [r * derate
+                   if any(s.replicas[d].zone == zone
+                          and s.replicas[d].gpu_type == acc
+                          for s in base.stages) else r
+                   for d, r in enumerate(rates)]
+            if deg == rates:
+                return None, None       # verdict pool not in this plan
+            vplan = adaptive_plan(base, deg)
+            if vplan is None or vplan.assignment == plan.assignment:
+                return None, None
+            # closed-form compute bound per chain: uniform ends with the
+            # slowest chain, proportional is work-conserving
+            per_chain = base.global_batch / base.dp
+            t_old_deg = per_chain / min(deg)
+            t_rb_deg = base.global_batch / sum(deg)
+            if not t_old_deg > 0.0 or t_rb_deg >= t_old_deg:
+                return None, None
+            return best.t_iter * (t_rb_deg / t_old_deg), vplan
+        vplan = adaptive_plan(base, rates)
+        if vplan is None or vplan.assignment == plan.assignment:
+            return None, None
+        vres = simulate(planner.profile, vplan, cluster,
+                        planner.mem_cfg, planner.engine_cfg)
+        if not vres.valid:
+            return None, None
+        return vres.t_iter, vplan
+
+    def _commit_rebalance(self, ev: Optional[ClusterEvent],
+                          vplan: ParallelPlan, dec: TransitionDecision,
+                          **extra) -> None:
+        """Swap the committed plan for its rebalanced variant in place:
+        same devices, same stages, new per-replica microbatch assignment.
+        The committed ``t_iter`` is kept — it prices the layout on the
+        nominal profile, which the rebalance does not change."""
+        assert self._committed is not None and self._committed.best
+        new_best = dataclasses.replace(self._committed.best, plan=vplan)
+        self._committed = dataclasses.replace(self._committed,
+                                              best=new_best)
+        self._record(ev, dec.kind, dec.reason, self._committed,
+                     rebalance=vplan.describe(), **extra)
+
     def _decide(self, cluster: ClusterSpec, *, mandatory: bool,
                 state_lost: bool, t_new: Optional[float],
                 t_old: Optional[float] = None,
                 event_age_s: float = 0.0,
                 root_cause: Optional[str] = None,
-                res: Optional[PlanResult] = None) -> TransitionDecision:
+                res: Optional[PlanResult] = None,
+                t_rebalance: Optional[float] = None) -> TransitionDecision:
         best = self._committed.best if self._committed else None
         t_iter_old = t_old if t_old is not None else \
             (best.t_iter if best else 1.0)
@@ -242,7 +323,8 @@ class Controller:
                 1, self.trainer.checkpoint_every),
             t_iter_old_s=t_iter_old, t_iter_new_s=t_new,
             event_age_s=event_age_s, root_cause=root_cause,
-            audit_failed=audit_failed)
+            audit_failed=audit_failed,
+            t_iter_rebalance_s=t_rebalance)
 
     def _record(self, event: Optional[ClusterEvent], action: str,
                 reason: str, result: Optional[PlanResult] = None,
@@ -421,10 +503,20 @@ class Controller:
                        t_median_s=median)
         self.bus.publish(ev)
         if self.config.replan_on_straggler:
-            res = self.replanner.replan(self.monitor.current)
-            self._record(ev, DEFER, "straggler replan (plan unchanged: "
-                         "slow step, same availability)", res,
-                         straggler=True)
+            cluster = self.monitor.current
+            res = self.replanner.replan(cluster)
+            # layout unchanged, but a microbatch rebalance may still pay:
+            # t_new=None keeps decide() from proposing a reshard here —
+            # the straggler carries no availability change to act on.
+            t_rb, vplan = self._rebalance_option(cluster)
+            dec = self._decide(cluster, mandatory=False, state_lost=False,
+                               t_new=None, t_rebalance=t_rb)
+            if dec.kind == REBALANCE:
+                self._commit_rebalance(ev, vplan, dec, straggler=True)
+            else:
+                self._record(ev, DEFER, "straggler replan (plan unchanged: "
+                             "slow step, same availability)", res,
+                             straggler=True)
 
     # --- the loop -------------------------------------------------------------
     def start(self) -> None:

@@ -33,6 +33,7 @@ RESHARD = "reshard"
 ROLLBACK = "rollback"
 DEFER = "defer"
 ROUTE_AROUND = "route-around"   # reshard variant: move off a slow pool/link
+REBALANCE = "rebalance"         # keep the layout, reassign microbatches
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +43,9 @@ class TransitionConfig:
     hysteresis_s: float = 120.0     # optional changes must persist this long
     min_gain_frac: float = 0.05     # and beat cost by this margin
     commit_horizon_s: float = 1800.0  # window the gain is amortized over
+    rebalance_cost_s: float = 5.0   # drain in-flight micros + swap loaders:
+    # no state moves and no communicator rebuild, so a per-replica
+    # microbatch reassignment is priced at a small flat drain cost
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +84,9 @@ class TransitionModel:
                t_iter_new_s: Optional[float],
                event_age_s: float = 0.0,
                root_cause: Optional[str] = None,
-               audit_failed: bool = False) -> TransitionDecision:
+               audit_failed: bool = False,
+               t_iter_rebalance_s: Optional[float] = None
+               ) -> TransitionDecision:
         """Pick the cheapest sound outcome for one proposed transition.
 
         ``mandatory``: capacity shrank below what the job runs on.
@@ -102,6 +108,13 @@ class TransitionModel:
         — its projected gain can't be trusted.  Mandatory moves and
         rollbacks still proceed: a broken-but-running layout beats no
         capacity at all, and the veto is recorded for the operator.
+        ``t_iter_rebalance_s``: simulated iteration time if the job keeps
+        its layout and only re-proportions per-replica microbatches
+        (``plan.adaptive_plan`` from measured rates).  No state moves and
+        no communicators rebuild, so it is priced at the flat
+        ``rebalance_cost_s`` and waives the hysteresis gate (trivially
+        reverted).  It wins over a full reshard whenever its net
+        amortized gain is at least as large.
         """
         reshard = self.reshard_cost_s(state_bytes, link, movers)
         details = {"reshard_cost_s": reshard}
@@ -122,18 +135,52 @@ class TransitionModel:
             return TransitionDecision(
                 RESHARD, reshard, "capacity below current plan; state intact",
                 details)
+        # price the layout-preserving rebalance (if the caller simulated
+        # one): same stages, same devices, only the per-replica microbatch
+        # assignment changes.
+        rb_net: Optional[float] = None
+        rb_gain = 0.0
+        if t_iter_rebalance_s is not None \
+                and t_iter_rebalance_s < t_iter_old_s:
+            rb_gain = (t_iter_old_s - t_iter_rebalance_s) / t_iter_old_s \
+                * self.cfg.commit_horizon_s
+            if rb_gain >= self.cfg.rebalance_cost_s \
+                    * (1.0 + self.cfg.min_gain_frac):
+                rb_net = rb_gain - self.cfg.rebalance_cost_s
+                details.update(rebalance_gain_s=rb_gain,
+                               rebalance_cost_s=self.cfg.rebalance_cost_s,
+                               t_rebalance=t_iter_rebalance_s)
         if audit_failed:
+            if rb_net is not None:
+                return TransitionDecision(
+                    REBALANCE, self.cfg.rebalance_cost_s,
+                    "replan target failed static audit; rebalancing "
+                    "microbatches on the current layout instead",
+                    {**details, "audit_failed": True})
             return TransitionDecision(
                 DEFER, 0.0,
                 "replan target failed static audit; optional move vetoed",
                 {**details, "audit_failed": True})
         if t_iter_new_s is None or t_iter_new_s >= t_iter_old_s:
+            if rb_net is not None:
+                return TransitionDecision(
+                    REBALANCE, self.cfg.rebalance_cost_s,
+                    f"no faster layout, but microbatch rebalance gains "
+                    f"{rb_gain:.1f}s over horizon for "
+                    f"{self.cfg.rebalance_cost_s:.1f}s",
+                    details)
             return TransitionDecision(
                 DEFER, 0.0, "no faster plan available", details)
         # optional improvement: amortized gain vs transition cost ...
         gain = (t_iter_old_s - t_iter_new_s) / t_iter_old_s \
             * self.cfg.commit_horizon_s
         details.update(gain_s=gain, t_old=t_iter_old_s, t_new=t_iter_new_s)
+        if rb_net is not None and rb_net >= gain - reshard:
+            return TransitionDecision(
+                REBALANCE, self.cfg.rebalance_cost_s,
+                f"rebalance net gain {rb_net:.1f}s >= reshard net "
+                f"{gain - reshard:.1f}s: keeping the layout",
+                details)
         if gain < reshard * (1.0 + self.cfg.min_gain_frac):
             return TransitionDecision(
                 DEFER, 0.0,

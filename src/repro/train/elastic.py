@@ -44,6 +44,9 @@ class RuntimePlan:
     dp: int
     tp: int
     num_microbatches: int = 1
+    # per-microbatch gradient weights (len == num_microbatches, summing
+    # to 1) from an adaptive plan's BatchAssignment; None = uniform
+    micro_weights: Optional[Tuple[float, ...]] = None
 
     def mesh_shape(self) -> Tuple[int, int]:
         assert self.dp * self.tp == self.n_devices, self
@@ -146,7 +149,8 @@ class ElasticTrainer:
                 self.opt_state = jax.device_put(self.opt_state, oshard)
         self.step_fn = ts_lib.jit_train_step(
             self.cfg, self.opt_cfg, mesh, plan.num_microbatches,
-            self.data_cfg.micro_batch)
+            self.data_cfg.micro_batch,
+            micro_weights=plan.micro_weights)
         self.mesh, self.plan = mesh, plan
 
     # --- failure path -------------------------------------------------------------

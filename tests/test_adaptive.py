@@ -1,0 +1,437 @@
+"""Adaptive per-replica microbatching tests: assignment math, typed plan
+errors, per-replica memory gating, engine/closed-form timing under weighted
+assignments, planner adoption on heterogeneous mixes, transition-model
+rebalance pricing, weighted gradient exactness, and (slow) real-pipeline
+convergence neutrality on 8 host devices.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import heterogeneous_zone, single_zone
+from repro.core.planner.dp_solver import DPSolver
+from repro.core.planner.objectives import MAX_THROUGHPUT, Objective
+from repro.core.planner.plan import (BatchAssignment, ParallelPlan,
+                                     PlanError, ReplicaBatch, StageConfig,
+                                     StageReplica, adaptive_plan,
+                                     homogeneous_plan)
+from repro.core.planner.search import plan_for
+from repro.core.profiler.analytic import JobProfile, TrainJob
+from repro.core.simulator import engine as eng
+from repro.core.simulator import memory as mem
+from repro.core.simulator import timing as tim
+from repro.core.simulator.simulate import simulate
+from repro.manager.transition import (DEFER, REBALANCE, RESHARD,
+                                      TransitionModel)
+from repro.core.profiler.hw_specs import LinkSpec
+
+OPT = get_config("opt-350m")
+ZONE = "us-central1-a"
+
+
+def _profile(gbs=256, seq=2048):
+    return JobProfile(TrainJob(cfg=OPT, seq_len=seq, global_batch=gbs))
+
+
+def _mixed_plan(pp=1, gbs=64, mbs=2, fast="A100-40", slow="V100-16",
+                n_fast=2, n_slow=2, seq=2048):
+    """pp-stage plan whose every stage mixes n_fast fast + n_slow slow
+    replicas — the canonical heterogeneous DP chain setup."""
+    prof = _profile(gbs, seq)
+    L = prof.n_partition_units
+    per = L // pp
+    bounds = [i * per for i in range(pp)] + [L]
+    reps = tuple(StageReplica(fast, 1, ZONE) for _ in range(n_fast)) + \
+        tuple(StageReplica(slow, 1, ZONE) for _ in range(n_slow))
+    stages = tuple(StageConfig(bounds[i], bounds[i + 1], reps)
+                   for i in range(pp))
+    return ParallelPlan(stages=stages, mbs=mbs, global_batch=gbs), prof
+
+
+# --- BatchAssignment math ----------------------------------------------------
+
+def test_uniform_assignment_conserves_and_is_uniform():
+    a = BatchAssignment.uniform(dp=4, mbs=2, n_micro=8)
+    a.validate(64)
+    assert a.is_uniform()
+    assert a.total_samples == 64
+    assert a.weights() == pytest.approx([0.25] * 4)
+
+
+def test_proportional_conservation_and_weights():
+    # 2:1 rates, B=64, n_micro=4 -> per-micro 16 split ~ (5,5,3,3)
+    a = BatchAssignment.proportional([2.0, 2.0, 1.0, 1.0], 64, 4)
+    assert a is not None
+    a.validate(64)
+    assert not a.is_uniform()
+    sizes = [rb.mbs for rb in a.replicas]
+    assert sum(sizes) * 4 == 64
+    assert sizes[0] > sizes[2]          # fast chains carry more
+    assert sum(a.weights()) == pytest.approx(1.0)
+    # weight proportional to carried samples
+    for rb, w in zip(a.replicas, a.weights()):
+        assert w == pytest.approx(rb.samples / 64)
+
+
+def test_proportional_respects_max_mbs_and_min_one():
+    a = BatchAssignment.proportional([100.0, 1.0], 32, 4, max_mbs=6)
+    if a is not None:
+        assert max(rb.mbs for rb in a.replicas) <= 6
+        assert min(rb.mbs for rb in a.replicas) >= 1
+        a.validate(32)
+
+
+def test_assignment_validate_raises_plan_error():
+    bad = BatchAssignment(replicas=(ReplicaBatch(2, 4), ReplicaBatch(2, 4)))
+    with pytest.raises(PlanError):
+        bad.validate(100)               # 2*2*4 = 16 != 100
+    with pytest.raises(PlanError):
+        BatchAssignment(replicas=()).validate(0)
+    with pytest.raises(PlanError):
+        BatchAssignment(replicas=(ReplicaBatch(0, 4),)).validate(0)
+
+
+def test_plan_validate_raises_typed_errors():
+    plan, _ = _mixed_plan(gbs=64, mbs=2)
+    plan.validate()                      # uniform path fine
+    with pytest.raises(PlanError):
+        dataclasses.replace(plan, mbs=7).validate()   # 64 % (4*7) != 0
+    # adaptive branch: assignment dp must match plan dp
+    a = BatchAssignment.proportional([2.0, 2.0, 1.0], 60, 4)
+    if a is not None:
+        with pytest.raises(PlanError):
+            dataclasses.replace(plan, assignment=a).validate()
+
+
+def test_replica_helpers_reduce_to_nominal_without_assignment():
+    plan, _ = _mixed_plan(gbs=64, mbs=2)
+    n_micro = plan.num_microbatches
+    for d in range(plan.dp):
+        assert plan.replica_mbs(d) == plan.mbs
+        assert plan.replica_n_micro(d) == n_micro
+    assert plan.grad_weights() == pytest.approx([1.0 / plan.dp] * plan.dp)
+
+
+def test_adaptive_plan_helper():
+    plan, prof = _mixed_plan(gbs=64, mbs=2)
+    rates = prof.chain_rates(plan)
+    assert max(rates) > min(rates)       # A100 vs V100
+    ap = adaptive_plan(plan, rates)
+    assert ap is not None
+    ap.validate()
+    assert ap.assignment is not None and not ap.assignment.is_uniform()
+    assert ap.mbs >= ap.assignment.max_mbs
+    # fast chains got the bigger microbatches
+    sizes = [rb.mbs for rb in ap.assignment.replicas]
+    assert sizes[0] >= sizes[-1]
+    # no-ops return None
+    assert adaptive_plan(ap, rates) is None            # already adaptive
+    assert adaptive_plan(plan, [1.0] * 3) is None      # rate-count mismatch
+    uni, _ = _mixed_plan(n_fast=4, n_slow=0)
+    assert adaptive_plan(uni, prof.chain_rates(uni)) is None  # uniform rates
+
+
+# --- memory ------------------------------------------------------------------
+
+def test_memory_gated_on_own_replica_mbs():
+    plan, prof = _mixed_plan(gbs=64, mbs=2)
+    ap = adaptive_plan(plan, prof.chain_rates(plan))
+    assert ap is not None
+    sizes = [rb.mbs for rb in ap.assignment.replicas]
+    big = sizes.index(max(sizes))
+    small = sizes.index(min(sizes))
+    assert sizes[big] > sizes[small]
+    m_big = mem.worker_peak_bytes(prof, ap, 0, 1, replica_idx=big)
+    m_small = mem.worker_peak_bytes(prof, ap, 0, 1, replica_idx=small)
+    assert m_big > m_small
+
+
+def test_staleness_adds_gradient_buffer_bytes():
+    plan, prof = _mixed_plan(gbs=64, mbs=2)
+    lagged = dataclasses.replace(plan, staleness=2)
+    assert mem.worker_peak_bytes(prof, lagged, 0, 1) > \
+        mem.worker_peak_bytes(prof, plan, 0, 1)
+
+
+# --- timing ------------------------------------------------------------------
+
+def test_adaptive_faster_than_uniform_on_2to1_mix():
+    cluster = heterogeneous_zone({"A100-40": 4, "V100-16": 4})
+    plan, prof = _mixed_plan(gbs=64, mbs=2)
+    ap = adaptive_plan(plan, prof.chain_rates(plan))
+    assert ap is not None
+    t_uni = tim.iteration_time(prof, plan, cluster).t_iter
+    t_ad = tim.iteration_time(prof, ap, cluster).t_iter
+    assert t_ad < t_uni
+
+
+def test_adaptive_engine_vs_closed_form_bounds():
+    """Differential on the 2:1 mix: the engine's adaptive time sits at or
+    below the closed form (overlap only hides communication) and above
+    the best chain's analytic floor."""
+    cluster = heterogeneous_zone({"A100-40": 8, "V100-16": 8})
+    for pp in (1, 2):
+        plan, prof = _mixed_plan(pp=pp, gbs=64, mbs=2)
+        ap = adaptive_plan(plan, prof.chain_rates(plan))
+        assert ap is not None
+        e = tim.iteration_time(prof, ap, cluster)
+        c = tim.closed_form_iteration_time(prof, ap, cluster)
+        assert e.t_iter <= c.t_iter * 1.001, pp
+        assert e.t_iter > 0.0 and np.isfinite(e.t_iter)
+
+
+def test_uniform_plan_unchanged_by_adaptive_code():
+    """Byte-identical uniform guarantee: an assignment-free plan times and
+    simulates exactly as before the refactor (assignment=None resolves to
+    the nominal everywhere — compare against the explicit uniform
+    assignment, which must route identically)."""
+    cluster = heterogeneous_zone({"A100-40": 4, "V100-16": 4})
+    plan, prof = _mixed_plan(gbs=64, mbs=2)
+    r_none = simulate(prof, plan, cluster)
+    assert r_none.valid
+    t = tim.iteration_time(prof, plan, cluster)
+    assert r_none.t_iter == t.t_iter
+
+
+def test_staleness_zero_is_identity():
+    cluster = heterogeneous_zone({"A100-40": 4, "V100-16": 4})
+    plan, prof = _mixed_plan(gbs=64, mbs=2)
+    k0 = dataclasses.replace(plan, staleness=0)
+    a = tim.iteration_time(prof, plan, cluster)
+    b = tim.iteration_time(prof, k0, cluster)
+    assert a.t_iter == b.t_iter and a.t_sync == b.t_sync
+
+
+def test_staleness_hides_sync_up_to_lag():
+    """With k>=1 the DP sync overlaps compute: t_iter drops toward the
+    compute-only makespan and never below it; the residual stall is
+    max(0, t_sync - k * t_iter)."""
+    cluster = heterogeneous_zone({"A100-40": 4, "V100-16": 4})
+    plan, prof = _mixed_plan(gbs=64, mbs=2)
+    sync_t = tim.iteration_time(prof, plan, cluster)
+    lag1 = tim.iteration_time(
+        prof, dataclasses.replace(plan, staleness=1), cluster)
+    assert lag1.t_iter <= sync_t.t_iter
+    assert lag1.t_iter > 0.0
+
+
+def test_straggler_smaller_mbs_shrinks_dp_sync_wait():
+    """Regression: giving the slow chain a smaller microbatch narrows the
+    spread of chain compute finish times — the wait the synchronous DP
+    all-reduce must absorb before its first bucket can start."""
+    plan, prof = _mixed_plan(gbs=64, mbs=2)
+    ap = adaptive_plan(plan, prof.chain_rates(plan))
+    assert ap is not None
+
+    def finish_spread(p):
+        per = []
+        for d in range(p.dp):
+            t = tim._stage_time(prof, p, 0, d)
+            per.append(p.replica_n_micro(d) * (t["fwd"] + t["bwd"]))
+        return max(per) - min(per)
+
+    assert finish_spread(ap) < finish_spread(plan)
+
+
+# --- planner -----------------------------------------------------------------
+
+def test_dp_solver_adaptive_bound_admissible():
+    from repro.core.planner import heuristics as H
+    cluster = heterogeneous_zone({"A100-40": 8, "V100-16": 8})
+    prof = _profile(64)
+    L = prof.n_partition_units
+    splits = [(0, L)]
+    regions, region_caps = H.region_pools(cluster)
+    solver = DPSolver(prof, cluster, splits, 2, 4,
+                      [{"A100-40": [1], "V100-16": [1]}],
+                      regions, region_caps)
+    part = solver.best(kind="time")
+    assert part is not None
+    t_ad = solver.adaptive_est_time(part)
+    assert 0.0 < t_ad <= part.est_time(solver.n_micro) + 1e-12
+
+
+def test_planner_selects_adaptive_with_speedup_on_mix():
+    """Acceptance: on a 2:1 heterogeneous DP mix the planner's adaptive
+    winner beats the best uniform plan by >= 1.2x simulated throughput."""
+    cluster = heterogeneous_zone({"A100-40": 16, "V100-16": 16})
+    res = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256)
+    uni = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256,
+                   adaptive=False)
+    assert res.best is not None and uni.best is not None
+    assert res.best.plan.assignment is not None
+    assert uni.best.plan.assignment is None
+    assert uni.best.t_iter / res.best.t_iter >= 1.2
+
+
+def test_planner_adaptive_off_is_pre_refactor_behavior():
+    """adaptive=False + staleness=0 never emits assignment/staleness."""
+    cluster = heterogeneous_zone({"A100-40": 16, "V100-16": 16})
+    res = plan_for(OPT, cluster, Objective(MAX_THROUGHPUT), 2048, 256,
+                   adaptive=False)
+    assert res.best.plan.assignment is None
+    assert res.best.plan.staleness == 0
+
+
+# --- transition --------------------------------------------------------------
+
+def test_transition_prefers_rebalance_over_reshard():
+    tm = TransitionModel()
+    link = LinkSpec(name="intra-zone", alpha=1e-3, beta=10e9)
+    kw = dict(mandatory=False, state_lost=False, state_bytes=4e9,
+              link=link, movers=4, steps_since_ckpt=3, t_iter_old_s=10.0,
+              event_age_s=1e6)
+    # rebalance recovers at least as much as the reshard for ~no cost: wins
+    d = tm.decide(t_iter_new_s=8.0, t_iter_rebalance_s=7.9, **kw)
+    assert d.kind == REBALANCE
+    assert d.cost_s == tm.cfg.rebalance_cost_s
+    # no rebalance option: the old reshard path is untouched
+    d2 = tm.decide(t_iter_new_s=8.0, t_iter_rebalance_s=None, **kw)
+    assert d2.kind == RESHARD
+    # rebalance below the gain gate defers as before
+    d3 = tm.decide(t_iter_new_s=None, t_iter_rebalance_s=9.9999, **kw)
+    assert d3.kind == DEFER
+
+
+# --- runtime gradients -------------------------------------------------------
+
+def test_loss_and_grads_weighted_uniform_matches_default():
+    import jax
+    import jax.numpy as jnp
+    from repro.train.train_step import loss_and_grads
+    from helpers import tiny_batch
+    cfg = get_config("smollm_360m").reduced()
+    params = __import__("repro.models.model",
+                        fromlist=["init"]).init(cfg, jax.random.PRNGKey(0))
+    b = tiny_batch(cfg, batch=4, seq=16)
+    batch = {k: v.reshape((2, 2) + v.shape[1:]) for k, v in b.items()}
+    l0, g0 = loss_and_grads(cfg, params, batch, None)
+    w = jnp.asarray([0.5, 0.5], jnp.float32)
+    l1, g1 = loss_and_grads(cfg, params, batch, None, micro_weights=w)
+    assert float(l0) == pytest.approx(float(l1), rel=1e-6)
+    for a, b_ in zip(jax.tree_util.tree_leaves(g0),
+                     jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_loss_and_grads_weighted_is_unbiased_mean():
+    """Unequal microbatches with w_m = b_m / B reproduce the flat-batch
+    mean gradient: 3+1 split of 4 sequences, weights (3/4, 1/4) over
+    padded equal-shape microbatches is equivalent to weighting two
+    2-sequence microbatches by their true sample shares."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as model_lib
+    from repro.train.train_step import loss_and_grads
+    from helpers import tiny_batch
+    cfg = get_config("smollm_360m").reduced()
+    params = model_lib.init(cfg, jax.random.PRNGKey(0))
+    b = tiny_batch(cfg, batch=4, seq=16)
+    flat_loss, flat_g = model_lib.loss_fn(cfg, params, b)[0], None
+    flat_g = jax.grad(lambda p: model_lib.loss_fn(cfg, p, b)[0])(params)
+    batch = {k: v.reshape((2, 2) + v.shape[1:]) for k, v in b.items()}
+    w = jnp.asarray([0.5, 0.5], jnp.float32)   # equal shares of B=4
+    l, g = loss_and_grads(cfg, params, batch, None, micro_weights=w)
+    assert float(l) == pytest.approx(float(flat_loss), rel=1e-5)
+    for a, b_ in zip(jax.tree_util.tree_leaves(flat_g),
+                     jax.tree_util.tree_leaves(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_shard_batch_by_assignment_tiles_exactly():
+    import jax.numpy as jnp
+    from repro.dist.pipeline import shard_batch_by_assignment
+    a = BatchAssignment.proportional([2.0, 1.0], 24, 2)
+    assert a is not None
+    a.validate(24)
+    batch = {"tokens": jnp.arange(24 * 4).reshape(24, 4)}
+    shards = shard_batch_by_assignment(batch, a)
+    assert len(shards) == 2
+    total = sum(s["tokens"].shape[0] * s["tokens"].shape[1]
+                for s in shards)
+    assert total == 24
+    flat = np.concatenate([np.asarray(s["tokens"]).reshape(-1, 4)
+                           for s in shards])
+    np.testing.assert_array_equal(flat, np.arange(24 * 4).reshape(24, 4))
+
+
+# --- real-pipeline convergence pin (8 host devices, slow) --------------------
+
+@pytest.mark.slow
+def test_adaptive_group_convergence_neutral_and_k0_bit_equal():
+    """2-stage MPMDPipeline, dp=2 via AdaptiveDPGroup on 8 host devices:
+    (a) staleness=0 weighted-uniform group is bit-equal to itself across
+    runs and matches the single-replica full-batch trajectory closely;
+    (b) an UNEVEN assignment (2:1) tracks the uniform loss trajectory
+    within tolerance — the weighted combine is convergence-neutral."""
+    from helpers import run_py
+    out = run_py("""
+        import copy, dataclasses, jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.core.planner.plan import BatchAssignment, ReplicaBatch
+        from repro.dist.pipeline import (AdaptiveDPGroup, MPMDPipeline,
+                                         even_stages,
+                                         shard_batch_by_assignment)
+        from repro.models import model as model_lib
+        from repro.train import optimizer as opt_lib
+
+        cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                                  n_layers=4, tie_embeddings=False)
+        opt = opt_lib.OptimizerConfig(lr=1e-3)
+        devs = jax.devices()
+
+        def make_group(assignment, staleness=0):
+            reps = []
+            for lo in (0, 4):
+                pipe = MPMDPipeline(cfg, even_stages(cfg, tps=[2, 2], dp=1),
+                                    opt, devices=devs[lo:lo + 4])
+                pipe.full_params_like(jax.device_get(
+                    model_lib.init(cfg, jax.random.PRNGKey(7))))
+                reps.append(pipe)
+            return AdaptiveDPGroup.from_assignment(reps, assignment,
+                                                   staleness=staleness)
+
+        B, S, STEPS = 8, 16, 6
+        rng = np.random.default_rng(0)
+        # one fixed batch repeated: the trajectory must then descend,
+        # which pins the optimizer step as well as the combine
+        toks = [rng.integers(0, cfg.vocab_size,
+                             (B, S + 1)).astype(np.int32)] * STEPS
+
+        def run(assignment, staleness=0):
+            g = make_group(assignment, staleness)
+            losses = []
+            for t in toks:
+                batch = {"tokens": jnp.asarray(t[:, :-1]),
+                         "labels": jnp.asarray(t[:, 1:])}
+                shards = shard_batch_by_assignment(batch, assignment)
+                losses.append(g.train_step(shards))
+            g.flush()
+            return losses
+
+        uni = BatchAssignment.uniform(dp=2, mbs=4, n_micro=1)
+        uni.validate(B)
+        l_uni = run(uni)
+        l_uni2 = run(uni)
+        assert l_uni == l_uni2, "k=0 uniform run not deterministic"
+
+        # k=0 with staleness arg explicitly zero: identical object path
+        l_k0 = run(uni, staleness=0)
+        assert l_k0 == l_uni, "staleness=0 not bit-equal to default"
+
+        ad = BatchAssignment(replicas=(ReplicaBatch(6, 1),
+                                       ReplicaBatch(2, 1)))
+        ad.validate(B)
+        l_ad = run(ad)
+        # same data, same init: unbiased weighted combine keeps the
+        # trajectories close (fp association only)
+        for a, b in zip(l_uni, l_ad):
+            assert abs(a - b) < 0.08 * max(1.0, abs(a)), (l_uni, l_ad)
+        assert l_ad[-1] < l_ad[0], "adaptive run failed to learn"
+        print("OK", l_uni[-1], l_ad[-1])
+    """, devices=8, timeout=900)
+    assert "OK" in out
